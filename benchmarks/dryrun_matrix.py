@@ -1,0 +1,97 @@
+"""Drive the full dry-run matrix: every (arch x shape) x {1-pod, 2-pod}.
+
+Each pair runs in its own subprocess (fresh XLA_FLAGS / device state) and
+appends a JSON record to results/dryrun_results.jsonl; completed pairs are
+skipped on re-run, so the matrix is resumable.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.dryrun_matrix [--multi-pod] [--arch A]
+      [--shape S] [--timeout 1200] [--force]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results", "dryrun_results.jsonl")
+
+ARCHS = [
+    "whisper-tiny", "internvl2-2b", "recurrentgemma-9b", "mistral-nemo-12b",
+    "granite-20b", "qwen3-1.7b", "deepseek-v2-236b", "qwen2-1.5b",
+    "qwen2-moe-a2.7b", "mamba2-780m",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def done_keys(path: str) -> set[tuple[str, str, str]]:
+    keys = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    keys.add((r["arch"], r["shape"], r.get("mesh", "")))
+    return keys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    mesh_tag = "pod=2,data=16,model=16" if args.multi_pod else "data=16,model=16"
+    done = set() if args.force else done_keys(RESULTS)
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else SHAPES
+    todo = [
+        (a, s) for a in archs for s in shapes
+        if (a, s, mesh_tag) not in done
+    ]
+    print(f"{len(todo)} pairs to run on mesh {mesh_tag}")
+    for i, (arch, shape) in enumerate(todo):
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--out", RESULTS,
+        ]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        try:
+            proc = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=args.timeout,
+                env=env, cwd=ROOT,
+            )
+            status = "ok" if proc.returncode == 0 else "FAIL"
+            tail = (proc.stdout or proc.stderr).strip().splitlines()
+            detail = tail[-1][:160] if tail else ""
+        except subprocess.TimeoutExpired:
+            status, detail = "TIMEOUT", ""
+            with open(RESULTS, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh_tag,
+                    "status": "error", "error": f"timeout>{args.timeout}s",
+                }) + "\n")
+        print(
+            f"[{i + 1}/{len(todo)}] {arch} x {shape}: {status} "
+            f"({time.time() - t0:.0f}s) {detail}",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

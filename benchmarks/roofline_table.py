@@ -1,0 +1,66 @@
+"""§Roofline: aggregate the dry-run records into the 40-pair baseline table.
+
+Reads the JSONL written by launch/dryrun.py runs (benchmarks/dryrun_matrix.py
+drives them) and renders the per-(arch x shape) roofline terms, dominant
+bottleneck, MODEL_FLOPS ratio and memory fit.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT_RESULTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "dryrun_results.jsonl",
+)
+
+
+def load(path: str = DEFAULT_RESULTS) -> dict[tuple[str, str, str], dict]:
+    """Latest record per (arch, shape, mesh)."""
+    records: dict[tuple[str, str, str], dict] = {}
+    if not os.path.exists(path):
+        return records
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            records[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return records
+
+
+def render(records: dict, mesh_filter: str = "data=16,model=16") -> list[str]:
+    lines = [
+        "arch,shape,status,compute_s,memory_s,collective_s,dominant,"
+        "peak_gib,model_flops_ratio"
+    ]
+    for (arch, shape, mesh), r in sorted(records.items()):
+        if mesh != mesh_filter:
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{arch},{shape},{r['status']},,,,,,")
+            continue
+        rf = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"{arch},{shape},ok,{rf['compute_s']:.4f},{rf['memory_s']:.4f},"
+            f"{rf['collective_s']:.4f},{rf['dominant']},"
+            f"{rf['peak_memory_per_device_gib']:.2f},"
+            f"{ratio:.3f}" if ratio else
+            f"{arch},{shape},ok,{rf['compute_s']:.4f},{rf['memory_s']:.4f},"
+            f"{rf['collective_s']:.4f},{rf['dominant']},"
+            f"{rf['peak_memory_per_device_gib']:.2f},"
+        )
+    return lines
+
+
+def main() -> list[str]:
+    records = load()
+    if not records:
+        return ["(no dry-run results yet — run benchmarks/dryrun_matrix.py)"]
+    return render(records)
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

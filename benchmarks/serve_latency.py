@@ -1,0 +1,39 @@
+"""Serving latency microbenchmark: decode ms/token per family (CPU, reduced
+configs) — the host-measurable counterpart of the decode-shape rooflines."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import get_bundle
+
+ARCHS = ["qwen2-1.5b", "qwen2-moe-a2.7b", "mamba2-780m", "recurrentgemma-9b",
+         "deepseek-v2-236b"]
+
+
+def main(archs=None, gen: int = 24) -> list[str]:
+    lines = ["arch,family,decode_ms_per_token"]
+    for name in archs or ARCHS:
+        cfg = registry.get(name).reduced()
+        bundle = get_bundle(cfg, chunked_attn=False)
+        params = bundle.init(jax.random.PRNGKey(0))
+        b, s = 4, 64
+        cache = bundle.init_cache(b, s, jnp.float32)
+        decode = jax.jit(bundle.decode, donate_argnums=(1,))
+        tok = jnp.zeros((b, 1), jnp.int32)
+        logits, cache = decode(params, cache, tok, jnp.asarray(0))  # compile
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for t in range(1, gen + 1):
+            logits, cache = decode(params, cache, tok, jnp.asarray(t))
+        jax.block_until_ready(logits)
+        ms = (time.perf_counter() - t0) / gen * 1e3
+        lines.append(f"{name},{cfg.family},{ms:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,43 @@
+"""Quickstart: train a DAEF autoencoder non-iteratively and detect anomalies.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs in a few seconds on CPU: builds a synthetic replica of the paper's
+"cardio" dataset, fits DAEF in ONE pass (no epochs), thresholds by IQR and
+reports F1 — the paper's core pipeline end to end.
+"""
+import time
+
+import jax.numpy as jnp
+
+from repro.core import anomaly, daef
+from repro.data import synthetic
+
+
+def main() -> None:
+    ds = synthetic.make_dataset("cardio")
+    x_train, x_test, y_test = ds.train_test_split(fold=0)
+    print(f"cardio replica: train {x_train.shape}, test {x_test.shape}")
+
+    cfg = daef.DAEFConfig(
+        layer_sizes=(21, 4, 8, 12, 16, 21),  # paper Table 5 (DAEF Xavier)
+        lam_hidden=0.9,
+        lam_last=0.9,
+        init="xavier",
+    )
+    daef.fit(cfg, jnp.asarray(x_train), n_partitions=4)  # warm-up (JIT)
+    t0 = time.perf_counter()
+    model = daef.fit(cfg, jnp.asarray(x_train), n_partitions=4)
+    jnp.asarray(model.train_errors).block_until_ready()
+    print(f"DAEF trained non-iteratively in {time.perf_counter() - t0:.2f}s "
+          f"({x_train.shape[1]} samples, {len(model.weights)} layers; "
+          f"one-time JIT compile excluded)")
+
+    errs = daef.reconstruction_error(cfg, model, jnp.asarray(x_test))
+    met = anomaly.evaluate(model.train_errors, errs, y_test, rule="q90")
+    print(f"F1 {met.f1:.3f}  precision {met.precision:.3f}  "
+          f"recall {met.recall:.3f}  (threshold rule: Q90)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving demo: prefill + KV-cache greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-780m]
+
+Thin wrapper over repro.launch.serve with CPU-friendly defaults; exercises
+the same decode_step the decode-shape dry-runs lower (ring caches for
+windowed archs, recurrent state for SSM/hybrid).
+"""
+import sys
+
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-1.7b", "--reduced",
+                "--batch", "4", "--prompt-len", "24", "--gen", "12",
+                *sys.argv[1:]]
+    serve.main()

@@ -1,0 +1,20 @@
+"""End-to-end LM training driver on the real train substrate.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-1.5b] [--steps 30]
+
+Uses the same train_step the multi-pod dry-run lowers (microbatch gradient
+accumulation + AdamW + clipping + checkpointing) on a reduced config sized
+for CPU.  Loss is asserted to go down.  This is a thin wrapper over
+repro.launch.train (see that module for all options).
+"""
+import sys
+
+from repro.launch import train
+
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen2-1.5b", "--reduced",
+                "--steps", "30", "--batch", "8", "--seq", "128",
+                "--microbatches", "2", "--ckpt", "/tmp/repro_ckpt",
+                *sys.argv[1:]]
+    train.main()

@@ -1,0 +1,56 @@
+"""Debug tool: per-dot FLOPs (with loop multipliers) for one dry-run pair."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+from repro.launch import dryrun as D
+from repro.launch import hlo_analysis as H
+
+
+def main(arch, shape, mb=None):
+    lowered, mesh, bundle, pshape, extras = D.build(
+        arch, shape, multi_pod=False, microbatches=int(mb) if mb else None
+    )
+    txt = lowered.compile().as_text()
+    comps = H._parse_computations(txt)
+    dot_tot = defaultdict(float)
+
+    def walk(name, mult, stack=()):
+        if name not in comps or name in stack:
+            return
+        comp = comps[name]
+        for op in comp.ops:
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if op.opcode.endswith("-done"):
+                continue
+            if base == "dot":
+                f = H._dot_flops(op, comp.shapes)
+                md = re.search(r'op_name="([^"]+)"', op.rest)
+                label = (md.group(1) if md else op.name)
+                parts = label.split("/")
+                label = "/".join(parts[-2:])[-70:] + " :: " + op.result[:40]
+                dot_tot[label] += f * mult
+            elif base == "while":
+                body = H._attr(op.rest, "body=")
+                cond = H._attr(op.rest, "condition=")
+                t = H._known_trip_count(op.rest) or (
+                    H._trip_count(comps[cond]) if cond in comps else 1
+                )
+                walk(body, mult * max(1, t), stack + (name,))
+            else:
+                callee = H._attr(op.rest, "calls=")
+                if callee:
+                    walk(callee, mult, stack + (name,))
+
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", txt)
+    walk(m.group(1), 1.0)
+    for label, f in sorted(dot_tot.items(), key=lambda kv: -kv[1])[:25]:
+        print(f"{f:.3e}  {label}")
+    print("TOTAL", f"{sum(dot_tot.values()):.3e}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,106 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from the JSONL
+records (results/dryrun_results.jsonl + results/daef_dryrun.jsonl)."""
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        r = json.loads(line)
+        if "tag" in r:
+            continue  # perf-iteration records are cited manually in §Perf
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs, mesh):
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "peak GiB/chip | MODEL_FLOPS/HLO |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | skipped (DESIGN §4) | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR | | | | | |")
+            continue
+        rf = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {arch} | {shape} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | {rf['dominant']} "
+            f"| {rf['peak_memory_per_device_gib']:.2f} "
+            f"| {ratio:.3f} |" if ratio is not None else
+            f"| {arch} | {shape} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | {rf['dominant']} "
+            f"| {rf['peak_memory_per_device_gib']:.2f} | |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = [
+        "| arch | shape | mesh | status | compile s | params | active | "
+        "peak GiB | collective GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {arch} | {shape} | {mesh} | skipped | | | | | |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {mesh} | ERROR | | | | | |")
+            continue
+        rf = r.get("roofline", {})
+        n = r.get("n_params", 0)
+        na = r.get("n_active_params", 0)
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | ok | {r.get('compile_s', '')} "
+            f"| {n/1e9:.2f}B | {na/1e9:.2f}B "
+            f"| {rf.get('peak_memory_per_device_gib', 0):.2f} "
+            f"| {fmt_bytes(rf.get('collective_bytes_per_device', 0))} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    recs = load(os.path.join(ROOT, "results", "dryrun_results.jsonl"))
+    daef = load(os.path.join(ROOT, "results", "daef_dryrun.jsonl"))
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "roofline1"):
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(roofline_table(recs, "data=16,model=16"))
+    if which in ("all", "roofline2"):
+        print("\n### Two-pod (2x16x16 = 512 chips)\n")
+        print(roofline_table(recs, "pod=2,data=16,model=16"))
+    if which in ("all", "dryrun"):
+        print("\n### Dry-run records\n")
+        print(dryrun_table(recs))
+    if which in ("all", "daef"):
+        print("\n### DAEF-on-mesh (the paper's technique)\n")
+        print(roofline_table(daef, "data=16,model=16"))
+        print()
+        print(roofline_table(daef, "pod=2,data=16,model=16"))
+
+
+if __name__ == "__main__":
+    main()

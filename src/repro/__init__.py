@@ -1,0 +1,13 @@
+"""repro — DAEF (Fast Deep Autoencoder for Federated learning) as a
+production-grade multi-pod JAX framework.
+
+Layers:
+  repro.core      — the paper: ROLANN/DSVD/ELM-AE non-iterative training,
+                    federated aggregation, anomaly detection
+  repro.models    — the assigned architecture zoo (6 families, 10 configs)
+  repro.kernels   — Pallas TPU kernels (rolann_stats, flash_attention,
+                    rglru_scan) with jnp oracles
+  repro.launch    — mesh/sharding/dry-run/train/serve entry points
+  repro.optim / repro.data / repro.train / repro.baselines — substrates
+"""
+__version__ = "1.0.0"

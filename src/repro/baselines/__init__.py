@@ -1,0 +1,3 @@
+"""Baselines the paper compares against (iterative deep autoencoder)."""
+from repro.baselines.autoencoder import AEConfig, AEModel  # noqa: F401
+from repro.baselines import autoencoder  # noqa: F401

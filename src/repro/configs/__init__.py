@@ -1,0 +1,2 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from repro.configs.base import ArchConfig  # noqa: F401

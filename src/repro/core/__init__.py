@@ -1,0 +1,23 @@
+"""DAEF core — the paper's contribution (non-iterative deep autoencoder).
+
+Public API:
+  activations  — f / f' / f^-1 bundles used by ROLANN
+  rolann       — closed-form one-layer solver + incremental merge
+  dsvd         — distributed truncated SVD (encoder)
+  elm_ae       — auxiliary-network decoder-layer trainer (TLD, Alg. 2)
+  daef         — DAEFConfig / fit / predict / merge_models / partial_fit
+  anomaly      — reconstruction-error thresholds + metrics
+  federated    — node simulation: broker protocol + layer-synchronized fit
+  sharded      — shard_map on-mesh DAEF (federated node == data shard)
+"""
+from repro.core import (  # noqa: F401
+    activations,
+    anomaly,
+    daef,
+    dsvd,
+    elm_ae,
+    federated,
+    initializers,
+    rolann,
+)
+from repro.core.daef import DAEFConfig, DAEFModel, fit, predict  # noqa: F401

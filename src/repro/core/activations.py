@@ -1,0 +1,133 @@
+"""Neural activation functions with derivative and inverse.
+
+ROLANN (Fontenla-Romero et al., 2010/2021) minimizes the MSE *before* the
+activation function: given targets ``d`` in the activation's output range, it
+needs the inverse ``d_bar = f^{-1}(d)`` and the derivative ``f'`` evaluated at
+``d_bar``.  Each activation therefore bundles ``(fn, deriv, inv)``.
+
+The inverse of saturating activations diverges at the range boundary, so
+targets are clipped into the open range with a small ``eps`` — this mirrors
+what the reference (NumPy) implementations of ROLANN/LANN-SVD do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation:
+    """An activation together with its derivative and inverse."""
+
+    name: str
+    fn: Callable[[Array], Array]
+    deriv: Callable[[Array], Array]      # f'(z) as a function of pre-activation z
+    inv: Callable[[Array], Array]        # f^{-1}(y), y clipped into the open range
+    # Open output range (lo, hi); None means unbounded on that side.
+    range: tuple[float | None, float | None] = (None, None)
+
+    def clip_to_range(self, y: Array) -> Array:
+        lo, hi = self.range
+        if lo is None and hi is None:
+            return y
+        lo_v = -jnp.inf if lo is None else lo + _EPS
+        hi_v = jnp.inf if hi is None else hi - _EPS
+        return jnp.clip(y, lo_v, hi_v)
+
+
+def _identity(z: Array) -> Array:
+    return z
+
+
+def _ones_like(z: Array) -> Array:
+    return jnp.ones_like(z)
+
+
+linear = Activation(
+    name="linear",
+    fn=_identity,
+    deriv=_ones_like,
+    inv=_identity,
+    range=(None, None),
+)
+
+
+def _logsig(z: Array) -> Array:
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def _logsig_deriv(z: Array) -> Array:
+    s = _logsig(z)
+    return s * (1.0 - s)
+
+
+def _logit(y: Array) -> Array:
+    return jnp.log(y) - jnp.log1p(-y)
+
+
+logsig = Activation(
+    name="logsig",
+    fn=_logsig,
+    deriv=_logsig_deriv,
+    inv=_logit,
+    range=(0.0, 1.0),
+)
+
+
+def _tanh_deriv(z: Array) -> Array:
+    t = jnp.tanh(z)
+    return 1.0 - t * t
+
+
+tanh = Activation(
+    name="tanh",
+    fn=jnp.tanh,
+    deriv=_tanh_deriv,
+    inv=jnp.arctanh,
+    range=(-1.0, 1.0),
+)
+
+
+# ``relu`` has no inverse; it is provided for the iterative AE baseline only.
+def _relu(z: Array) -> Array:
+    return jnp.maximum(z, 0.0)
+
+
+def _relu_deriv(z: Array) -> Array:
+    return (z > 0).astype(z.dtype)
+
+
+relu = Activation(
+    name="relu",
+    fn=_relu,
+    deriv=_relu_deriv,
+    inv=_identity,  # placeholder; never used by ROLANN (see get())
+    range=(0.0, None),
+)
+
+_INVERTIBLE = {"linear", "logsig", "tanh"}
+_REGISTRY = {a.name: a for a in (linear, logsig, tanh, relu)}
+
+
+def get(name: str, *, invertible_required: bool = False) -> Activation:
+    """Look up an activation by name.
+
+    ``invertible_required=True`` restricts to activations usable by ROLANN
+    (which needs ``f^{-1}``).
+    """
+    try:
+        act = _REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(f"unknown activation {name!r}; have {sorted(_REGISTRY)}") from e
+    if invertible_required and name not in _INVERTIBLE:
+        raise ValueError(
+            f"activation {name!r} has no inverse and cannot be used with ROLANN; "
+            f"choose one of {sorted(_INVERTIBLE)}"
+        )
+    return act

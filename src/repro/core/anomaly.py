@@ -1,0 +1,84 @@
+"""Anomaly detection on top of reconstruction errors (paper §6).
+
+The classification rule: a sample is anomalous iff its reconstruction MSE
+exceeds a threshold ``mu`` derived from the *training* (normal-only) errors.
+The paper uses the interquartile range —
+
+    unusual IQR:  mu = Q3 + 1.5 * IQR
+    extreme IQR:  mu = Q3 + 3.0 * IQR
+
+— or a plain quantile (e.g. Q90) chosen from the known contamination level.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def threshold(train_errors: Array, rule: str = "extreme_iqr") -> Array:
+    """Compute mu from training reconstruction errors.
+
+    rule: "unusual_iqr" | "extreme_iqr" | "q<percent>" (e.g. "q90").
+    """
+    if rule.startswith("q") and rule[1:].isdigit():
+        return jnp.quantile(train_errors, float(rule[1:]) / 100.0)
+    q1 = jnp.quantile(train_errors, 0.25)
+    q3 = jnp.quantile(train_errors, 0.75)
+    iqr = q3 - q1
+    if rule == "unusual_iqr":
+        return q3 + 1.5 * iqr
+    if rule == "extreme_iqr":
+        return q3 + 3.0 * iqr
+    raise ValueError(f"unknown threshold rule {rule!r}")
+
+
+def classify(errors: Array, mu: Array) -> Array:
+    """1 = anomaly, 0 = normal."""
+    return (errors > mu).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryMetrics:
+    f1: float
+    precision: float
+    recall: float
+    accuracy: float
+    tp: int
+    fp: int
+    fn: int
+    tn: int
+
+
+def binary_metrics(pred: Array, truth: Array) -> BinaryMetrics:
+    """F1 & friends with anomaly (1) as the positive class."""
+    pred = jnp.asarray(pred).astype(bool)
+    truth = jnp.asarray(truth).astype(bool)
+    tp = int(jnp.sum(pred & truth))
+    fp = int(jnp.sum(pred & ~truth))
+    fn = int(jnp.sum(~pred & truth))
+    tn = int(jnp.sum(~pred & ~truth))
+    precision = tp / (tp + fp) if tp + fp else 0.0
+    recall = tp / (tp + fn) if tp + fn else 0.0
+    f1 = (
+        2 * precision * recall / (precision + recall)
+        if precision + recall
+        else 0.0
+    )
+    accuracy = (tp + tn) / max(1, tp + fp + fn + tn)
+    return BinaryMetrics(
+        f1=f1, precision=precision, recall=recall, accuracy=accuracy,
+        tp=tp, fp=fp, fn=fn, tn=tn,
+    )
+
+
+def evaluate(
+    train_errors: Array,
+    test_errors: Array,
+    truth: Array,
+    rule: str = "extreme_iqr",
+) -> BinaryMetrics:
+    mu = threshold(train_errors, rule)
+    return binary_metrics(classify(test_errors, mu), truth)

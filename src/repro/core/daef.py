@@ -1,0 +1,234 @@
+"""DAEF — Deep Autoencoder for Federated learning (paper §4, Algorithms 1-3).
+
+Architecture (Fig. 2): an asymmetric deep autoencoder.
+
+  * encoder: ONE layer whose weights are the truncated left singular vectors
+    of the data matrix, obtained by a (distributed) SVD — no bias;
+  * decoder: several layers, each trained non-iteratively with the auxiliary
+    ELM-AE + ROLANN procedure (elm_ae.train_layer);
+  * last layer: ROLANN directly against the original inputs, linear
+    activation.
+
+Everything is closed-form — no gradients, no epochs.  The model carries the
+mergeable sufficient statistics (encoder factors + per-layer ROLANN
+knowledge), so trained models can be aggregated federated-style
+(`merge_models`) or updated incrementally (`partial_fit`).
+
+Data convention (paper): X is [features m0, samples n].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import activations, dsvd, elm_ae, rolann
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DAEFConfig:
+    """Hyperparameters (paper Alg. 1 inputs + Appendix Table 5 naming).
+
+    layer_sizes: the paper's ``a`` — [m0, m1, ..., m0]; m1 is the latent
+        dimension, the first entry must equal the input dimension and the
+        last entry must equal the input dimension (autoencoder).
+    """
+
+    layer_sizes: tuple[int, ...]
+    lam_hidden: float = 0.01          # lambda_HL
+    lam_last: float = 0.1             # lambda_LL
+    act_hidden: str = "logsig"        # f_HL
+    act_last: str = "linear"          # f_LL
+    init: str = "xavier"              # stage-1 initializer (xavier|random|orthogonal)
+    aux_bias: str = "zero"            # decoder bias scheme (see elm_ae)
+    method: str = "gram"              # "gram" fast path | "svd" paper-faithful
+    seed: int = 0                     # shared randomness across federated nodes
+
+    def __post_init__(self):
+        if len(self.layer_sizes) < 3:
+            raise ValueError("DAEF needs at least [m0, m1, m0]")
+        if self.layer_sizes[0] != self.layer_sizes[-1]:
+            raise ValueError(
+                f"autoencoder must reconstruct its input: "
+                f"{self.layer_sizes[0]} != {self.layer_sizes[-1]}"
+            )
+
+    @property
+    def latent_dim(self) -> int:
+        return self.layer_sizes[1]
+
+    @property
+    def n_decoder_hidden(self) -> int:
+        # layers strictly between the latent layer and the output layer
+        return len(self.layer_sizes) - 3
+
+    def layer_keys(self) -> list[jax.Array]:
+        """Deterministic per-layer keys — the shared randomness every
+        federated node derives identically from the agreed seed."""
+        root = jax.random.PRNGKey(self.seed)
+        return list(jax.random.split(root, max(1, len(self.layer_sizes))))
+
+
+class DAEFModel(NamedTuple):
+    """Trained model M (Alg. 1 output)."""
+
+    weights: tuple[Array, ...]          # W1 (encoder), W2..WL (decoder)
+    biases: tuple[Array, ...]           # decoder biases (len = len(weights)-1)
+    encoder_factors: dsvd.SvdFactors    # untruncated U1, S1 (mergeable)
+    layer_knowledge: tuple              # ROLANN knowledge per decoder layer
+    train_errors: Array                 # per-sample reconstruction MSE on train
+
+
+def _acts(config: DAEFConfig):
+    f_hl = activations.get(config.act_hidden, invertible_required=True)
+    f_ll = activations.get(config.act_last, invertible_required=True)
+    return f_hl, f_ll
+
+
+def fit(config: DAEFConfig, x: Array, *, n_partitions: int = 1) -> DAEFModel:
+    """Alg. 1 — non-iterative DAEF training on a single host.
+
+    ``n_partitions`` splits the samples to exercise the distributed SVD /
+    ROLANN merge paths exactly as the paper describes (the result is
+    identical to n_partitions=1 up to numerics).
+    """
+    m0, n = x.shape
+    if m0 != config.layer_sizes[0]:
+        raise ValueError(f"input dim {m0} != layer_sizes[0] {config.layer_sizes[0]}")
+    f_hl, f_ll = _acts(config)
+    keys = config.layer_keys()
+
+    # ---- encoder: distributed truncated SVD (lines 5-12) ----
+    parts = _split(x, n_partitions)
+    enc = dsvd.dsvd(parts, rank=min(m0, x.shape[1]), method=_dsvd_method(config))
+    w_enc = enc.u[:, : config.latent_dim]
+    h = f_hl.fn(w_enc.T @ x)  # [m1, n]
+
+    weights = [w_enc]
+    biases: list[Array] = []
+    knowledge: list = []
+
+    # ---- decoder hidden layers (lines 13-19) ----
+    sizes = config.layer_sizes
+    for li in range(2, len(sizes) - 1):
+        res = elm_ae.train_layer(
+            keys[li],
+            h,
+            sizes[li],
+            config.lam_hidden,
+            f_hl,
+            init=config.init,
+            aux_bias=config.aux_bias,
+            method=config.method,
+        )
+        weights.append(res.w)
+        biases.append(res.b)
+        knowledge.append(res.knowledge)
+        h = res.h
+
+    # ---- last layer: supervised ROLANN to reconstruct X (lines 20-25) ----
+    w_ll, b_ll, k_ll = rolann.fit(h, x, f_ll, config.lam_last, method=config.method)
+    weights.append(w_ll)
+    biases.append(b_ll)
+    knowledge.append(k_ll)
+    recon = f_ll.fn(w_ll.T @ h + b_ll[:, None])
+    train_errors = jnp.mean((recon - x) ** 2, axis=0)
+
+    return DAEFModel(
+        weights=tuple(weights),
+        biases=tuple(biases),
+        encoder_factors=enc,
+        layer_knowledge=tuple(knowledge),
+        train_errors=train_errors,
+    )
+
+
+def predict(config: DAEFConfig, model: DAEFModel, x: Array) -> Array:
+    """Alg. 3 — reconstruct test samples x [m0, n]."""
+    f_hl, f_ll = _acts(config)
+    h = f_hl.fn(model.weights[0].T @ x)  # encoder: no bias
+    for w, b in zip(model.weights[1:-1], model.biases[:-1]):
+        h = f_hl.fn(w.T @ h + b[:, None])
+    w, b = model.weights[-1], model.biases[-1]
+    return f_ll.fn(w.T @ h + b[:, None])
+
+
+def reconstruction_error(config: DAEFConfig, model: DAEFModel, x: Array) -> Array:
+    """Per-sample MSE reconstruction error (the anomaly score)."""
+    recon = predict(config, model, x)
+    return jnp.mean((recon - x) ** 2, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Federated aggregation / incremental learning
+# ---------------------------------------------------------------------------
+
+def merge_models(config: DAEFConfig, a: DAEFModel, b: DAEFModel, x_stats=None) -> DAEFModel:
+    """Aggregate two DAEF models trained on different partitions (paper §4.3).
+
+    The exchanged state is exactly what the paper sends through the broker:
+    the encoder's (U, S) factors and each decoder layer's (M, U, S) ROLANN
+    knowledge.  Weights are re-solved from the merged knowledge.
+
+    NOTE (documented in DESIGN.md): as in the paper, each node computed its
+    decoder statistics against its *local* encoder; after the encoders merge
+    the decoder statistics are an approximation of the centralized solution.
+    For the exact-centralized protocol use `federated.federated_fit`, which
+    synchronizes layer-by-layer.
+    """
+    f_hl, f_ll = _acts(config)
+    keys = config.layer_keys()
+    sizes = config.layer_sizes
+
+    enc = dsvd.merge_pair(a.encoder_factors, b.encoder_factors)
+    w_enc = enc.u[:, : config.latent_dim]
+    weights = [w_enc]
+    biases: list[Array] = []
+    knowledge: list = []
+
+    merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
+    for li in range(2, len(sizes) - 1):
+        k = merge(a.layer_knowledge[li - 2], b.layer_knowledge[li - 2])
+        w, bias = elm_ae.layer_from_knowledge(
+            k, keys[li], sizes[li - 1], sizes[li], config.lam_hidden, f_hl,
+            init=config.init, aux_bias=config.aux_bias, dtype=w_enc.dtype,
+        )
+        weights.append(w)
+        biases.append(bias)
+        knowledge.append(k)
+
+    k_ll = merge(a.layer_knowledge[-1], b.layer_knowledge[-1])
+    w_ll, b_ll = rolann.solve(k_ll, config.lam_last)
+    weights.append(w_ll)
+    biases.append(b_ll)
+    knowledge.append(k_ll)
+
+    return DAEFModel(
+        weights=tuple(weights),
+        biases=tuple(biases),
+        encoder_factors=enc,
+        layer_knowledge=tuple(knowledge),
+        train_errors=jnp.concatenate([a.train_errors, b.train_errors]),
+    )
+
+
+def partial_fit(config: DAEFConfig, model: DAEFModel, x_new: Array) -> DAEFModel:
+    """Incremental learning: absorb a new data block into a trained model."""
+    update = fit(config, x_new)
+    return merge_models(config, model, update)
+
+
+def _split(x: Array, p: int) -> list[Array]:
+    if p <= 1:
+        return [x]
+    n = x.shape[1]
+    bounds = [round(i * n / p) for i in range(p + 1)]
+    return [x[:, bounds[i] : bounds[i + 1]] for i in range(p)]
+
+
+def _dsvd_method(config: DAEFConfig) -> str:
+    return "gram" if config.method == "gram" else "svd"

@@ -1,0 +1,50 @@
+"""Weight initializers for the DAEF auxiliary networks (paper §4.2, §6).
+
+The paper evaluates three schemes for the fixed stage-1 weights of the
+auxiliary ELM-AE: Xavier Glorot (default), fully random, and orthogonal.
+All nodes in a federation must generate the *same* weights, so every
+initializer is a pure function of a seed (shared via the broker in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def xavier(key: jax.Array, shape: tuple[int, int], dtype=jnp.float32) -> Array:
+    """Glorot uniform: U(-sqrt(6/(fan_in+fan_out)), +)."""
+    fan_in, fan_out = shape
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def random_normal(key: jax.Array, shape: tuple[int, int], dtype=jnp.float32) -> Array:
+    return jax.random.normal(key, shape, dtype)
+
+
+def orthogonal(key: jax.Array, shape: tuple[int, int], dtype=jnp.float32) -> Array:
+    """Orthogonal columns (QR of a Gaussian), scaled to unit gain."""
+    rows, cols = shape
+    big = max(rows, cols)
+    a = jax.random.normal(key, (big, min(rows, cols)), dtype)
+    q, r = jnp.linalg.qr(a)
+    # Sign-fix for determinism across BLAS implementations.
+    q = q * jnp.sign(jnp.diagonal(r))[None, :]
+    q = q[:rows, :cols] if rows >= cols else q[:cols, :rows].T
+    return q.astype(dtype)
+
+
+_REGISTRY = {
+    "xavier": xavier,
+    "random": random_normal,
+    "orthogonal": orthogonal,
+}
+
+
+def get(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(f"unknown initializer {name!r}; have {sorted(_REGISTRY)}") from e

@@ -1,0 +1,193 @@
+"""DAEF on a device mesh: federated node == data-parallel shard.
+
+This is the TPU-native mapping of the paper's broker protocol (DESIGN.md §2):
+every shard along the data mesh axes holds one partition X^p and plays one
+federated node.  The aggregation collective depends on the representation:
+
+* ``method="gram"``  — one ``psum`` of (G, M) per layer (fast path);
+* ``method="svd"``   — ``all_gather`` of the local U·S blocks followed by the
+  merge SVD at every node (paper-faithful; the broker "send to all" becomes
+  the all-gather).
+
+Both run inside a single ``shard_map`` and produce weights bit-identically
+replicated across the mesh.  The layer loop is a Python loop: DAEF is
+non-iterative and shallow (<= ~8 layers), so unrolling is the right call.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import activations, daef, dsvd, elm_ae, rolann
+
+Array = jnp.ndarray
+
+
+def _replicated(x: Array, axes) -> Array:
+    """Mark a per-shard-identical value as replicated for shard_map's VMA
+    check: psum(x)/P == x when every shard holds the same value, and the psum
+    resets the varying-axes tracking (the factors are tiny, so the extra
+    reduce is noise next to the gather itself)."""
+    denom = 1.0
+    for ax in axes:
+        denom = denom * lax.axis_size(ax)
+    return lax.psum(x, axes) / denom
+
+
+def _gather_merge_svd(us: Array, axes) -> tuple[Array, Array]:
+    """all_gather local U*S blocks along their column axis and re-SVD.
+
+    us: [..., m, r] local weighted factors; returns merged (u, s) truncated
+    to m columns — the on-mesh version of Eq. (2)/(8).
+    """
+    col_axis = us.ndim - 1
+    gathered = us
+    for ax in axes:
+        gathered = lax.all_gather(gathered, ax, axis=col_axis, tiled=True)
+    u, s, _ = jnp.linalg.svd(gathered, full_matrices=False)
+    m = us.shape[-2]
+    u, s = u[..., :, :m], s[..., :m]
+    return _replicated(u, tuple(axes)), _replicated(s, tuple(axes))
+
+
+def _psum(tree, axes):
+    for ax in axes:
+        tree = lax.psum(tree, ax)
+    return tree
+
+
+def fit_on_mesh(
+    config: daef.DAEFConfig,
+    x: Array,
+    mesh: Mesh,
+    *,
+    data_axes: Sequence[str] = ("data",),
+    local_factorization: str = "gram_eigh",
+) -> daef.DAEFModel:
+    """Fit DAEF with the sample axis sharded over ``data_axes`` of ``mesh``.
+
+    x: [m0, n]; n must divide evenly over the product of the data axes.
+    Returns a DAEFModel whose weights are replicated and whose train_errors
+    remain sharded over the data axes.
+    """
+    f_hl = activations.get(config.act_hidden, invertible_required=True)
+    f_ll = activations.get(config.act_last, invertible_required=True)
+    keys = config.layer_keys()
+    sizes = config.layer_sizes
+    use_gram = config.method == "gram"
+    axes = tuple(data_axes)
+
+    def node(xp: Array):
+        # ---------------- encoder ----------------
+        if use_gram:
+            g = _psum(xp @ xp.T, axes)
+            enc_u, enc_s = dsvd.gram_to_factors(g)
+        else:
+            # Local factors: eigh of the local Gram (default) carries the
+            # same U·S message as the paper's direct SVD but avoids its
+            # O(m * n_local) right-factor workspace.
+            f = (
+                dsvd.gram_to_factors(dsvd.gram(xp))
+                if local_factorization == "gram_eigh"
+                else dsvd.local_svd(xp)
+            )
+            enc_u, enc_s = _gather_merge_svd(f.u * f.s[None, :], axes)
+        w_enc = enc_u[:, : config.latent_dim]
+        h = f_hl.fn(w_enc.T @ xp)
+
+        weights = [w_enc]
+        biases = []
+        knowledge = []
+
+        # ---------------- decoder hidden layers ----------------
+        for li in range(2, len(sizes) - 1):
+            local = elm_ae.layer_knowledge_from_partition(
+                keys[li], h, sizes[li], f_hl,
+                init=config.init, method=config.method,
+                factorization=local_factorization,
+            )
+            if use_gram:
+                merged = _psum(local, axes)
+            else:
+                u, s = _gather_merge_svd(local.u * local.s[..., None, :], axes)
+                m_vec = _psum(local.m, axes)
+                merged = rolann.RolannFactors(u=u, s=s, m=m_vec)
+            w, b = elm_ae.layer_from_knowledge(
+                merged, keys[li], sizes[li - 1], sizes[li],
+                config.lam_hidden, f_hl,
+                init=config.init, aux_bias=config.aux_bias, dtype=xp.dtype,
+            )
+            weights.append(w)
+            biases.append(b)
+            knowledge.append(merged)
+            h = f_hl.fn(w.T @ h + b[:, None])
+
+        # ---------------- last layer ----------------
+        if use_gram:
+            local = rolann.compute_stats(h, xp, f_ll)
+        elif local_factorization == "gram_eigh":
+            local = rolann.compute_factors_via_gram(h, xp, f_ll)
+        else:
+            local = rolann.compute_factors(h, xp, f_ll)
+        if use_gram:
+            merged = _psum(local, axes)
+        else:
+            u, s = _gather_merge_svd(local.u * local.s[..., None, :], axes)
+            merged = rolann.RolannFactors(u=u, s=s, m=_psum(local.m, axes))
+        w_ll, b_ll = rolann.solve(merged, config.lam_last)
+        weights.append(w_ll)
+        biases.append(b_ll)
+        knowledge.append(merged)
+
+        recon = f_ll.fn(w_ll.T @ h + b_ll[:, None])
+        errors = jnp.mean((recon - xp) ** 2, axis=0)
+        return (
+            tuple(weights),
+            tuple(biases),
+            (enc_u, enc_s),
+            tuple(knowledge),
+            errors,
+        )
+
+    data_spec = P(None, axes)
+    rep = P()
+    out_specs = (rep, rep, rep, rep, P(axes))
+    # Manual collectives over the data axes only; the model axis stays
+    # "auto" so XLA shards the per-output ROLANN solves across it (the
+    # paper's per-core output parallelism, TPU-native — DESIGN.md §2).
+    fn = jax.shard_map(
+        node,
+        mesh=mesh,
+        in_specs=(data_spec,),
+        out_specs=out_specs,
+        axis_names=set(axes),
+        check_vma=True,
+    )
+    weights, biases, (enc_u, enc_s), knowledge, errors = fn(x)
+    return daef.DAEFModel(
+        weights=weights,
+        biases=biases,
+        encoder_factors=dsvd.SvdFactors(u=enc_u, s=enc_s),
+        layer_knowledge=knowledge,
+        train_errors=errors,
+    )
+
+
+def predict_on_mesh(
+    config: daef.DAEFConfig,
+    model: daef.DAEFModel,
+    x: Array,
+    mesh: Mesh,
+    *,
+    data_axes: Sequence[str] = ("data",),
+) -> Array:
+    """Reconstruction with samples sharded over the data axes (pure pjit)."""
+    spec = NamedSharding(mesh, P(None, tuple(data_axes)))
+    x = jax.device_put(x, spec)
+    return jax.jit(partial(daef.predict, config), static_argnums=())(model, x)

@@ -1,0 +1,8 @@
+"""Data substrate: synthetic dataset replicas + batching/sharding pipeline."""
+from repro.data.synthetic import (  # noqa: F401
+    PAPER_DATASETS,
+    AnomalyDataset,
+    lm_token_stream,
+    make_dataset,
+)
+from repro.data.pipeline import batches, shard_batch, token_batches  # noqa: F401

@@ -1,0 +1,51 @@
+"""Host-side data pipeline: batching, sharding, prefetch-style iteration.
+
+Deliberately simple and dependency-free: deterministic numpy batching with
+per-epoch shuffling, plus a helper that device_puts global batches with the
+mesh sharding the launcher requests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def batches(
+    x: np.ndarray,
+    batch_size: int,
+    *,
+    axis: int = 1,
+    seed: int = 0,
+    epochs: int | None = None,
+    drop_remainder: bool = True,
+) -> Iterator[np.ndarray]:
+    """Shuffled mini-batches along ``axis`` (column-major like the core)."""
+    n = x.shape[axis]
+    rng = np.random.default_rng(seed)
+    epoch = 0
+    while epochs is None or epoch < epochs:
+        idx = rng.permutation(n)
+        stop = (n // batch_size) * batch_size if drop_remainder else n
+        for lo in range(0, stop, batch_size):
+            take = idx[lo : lo + batch_size]
+            yield np.take(x, take, axis=axis)
+        epoch += 1
+
+
+def token_batches(
+    sampler: Callable[[int], np.ndarray],
+    steps: int,
+) -> Iterator[np.ndarray]:
+    """LM batches from a seeded sampler(step) -> [batch, seq] int32."""
+    for step in range(steps):
+        yield sampler(step)
+
+
+def shard_batch(batch, mesh: Mesh, spec: P):
+    """Place a host batch onto the mesh with the given PartitionSpec."""
+    sharding = NamedSharding(mesh, spec)
+    return jax.tree.map(lambda a: jax.device_put(a, sharding), batch)

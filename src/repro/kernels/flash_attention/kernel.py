@@ -1,0 +1,264 @@
+"""Pallas TPU kernel: causal (optionally windowed) flash attention forward.
+
+Streaming softmax over KV blocks with running (max, sum, acc) carried in VMEM
+scratch.  Grid (N, n_q_blocks, n_kv_blocks): the KV axis iterates innermost
+(sequential on TPU) so the scratch accumulates correctly; Q blocks and the
+batch*heads axis are independent.
+
+Block sizes target VMEM: q/k/v tiles [bq, D]/[bk, D] plus an [bq, bk] score
+tile; with bq = bk = 512 and D = 128 in bf16 this is ~1.4 MB — comfortably
+inside the ~16 MB/core VMEM while keeping the MXU matmuls 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+    causal: bool,
+    window: int | None,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [bq, D]
+    k = k_ref[0]                                   # [bk, D]
+    d = q.shape[-1]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (d**-0.5)                                  # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l_final = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l_final).astype(o_ref.dtype)
+        lse_ref[0] = (m_scr[...] + jnp.log(l_final))[:, 0].astype(lse_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jnp.ndarray,        # [N, S, D]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            block_q=block_q,
+            block_k=block_k,
+            n_kv=nk,
+            causal=causal,
+            window=window,
+        ),
+        grid=(n, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ni, qi, ki: (ni, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, qi, ki: (ni, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, qi, ki: (ni, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ni, qi, ki: (ni, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda ni, qi, ki: (ni, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s, d), q.dtype),
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            _scratch((block_q, 1)),
+            _scratch((block_q, 1)),
+            _scratch((block_q, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Backward (flash attention VJP): standard two-kernel formulation.
+#   p_ij  = exp(scale * q_i k_j - lse_i)
+#   dp_ij = dout_i . v_j ;  ds_ij = p_ij * (dp_ij - D_i), D_i = dout_i . out_i
+#   dq_i  = scale * sum_j ds_ij k_j
+#   dk_j  = scale * sum_i ds_ij q_i ;  dv_j = sum_i p_ij dout_i
+# ---------------------------------------------------------------------------
+
+def _mask(block_q, block_k, qi, ki, causal, window):
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return ok
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dq_ref, dq_scr,
+               *, block_q, block_k, n_kv, causal, window):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    p = jnp.exp(s - lse_ref[0][:, None])
+    p = jnp.where(_mask(block_q, block_k, qi, ki, causal, window), p, 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dvec_ref[0][:, None])
+    dq_scr[...] += scale * jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr,
+                *, block_q, block_k, n_q, causal, window):
+    ki, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    p = jnp.exp(s - lse_ref[0][:, None])
+    p = jnp.where(_mask(q.shape[0], k.shape[0], qi, ki, causal, window), p, 0.0)
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dvec_ref[0][:, None])
+    dk_scr[...] += scale * jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q - 1)
+    def _finish():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_kernels(
+    q, k, v, do, lse, dvec, *,
+    causal=True, window=None, block_q=512, block_k=512, interpret=False,
+):
+    """Returns (dq, dk, dv) — both backward kernels. Shapes [N, S, D]."""
+    n, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nk = s // block_q, s // block_k
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
+                          n_kv=nk, causal=causal, window=window),
+        grid=(n, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ni, qi, ki: (ni, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, qi, ki: (ni, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, qi, ki: (ni, ki, 0)),
+            pl.BlockSpec((1, block_q, d), lambda ni, qi, ki: (ni, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda ni, qi, ki: (ni, qi)),
+            pl.BlockSpec((1, block_q), lambda ni, qi, ki: (ni, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda ni, qi, ki: (ni, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s, d), q.dtype),
+        scratch_shapes=[_scratch((block_q, d))],
+        interpret=interpret,
+    )(q, k, v, do, lse, dvec)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=block_q, block_k=block_k,
+                          n_q=nq, causal=causal, window=window),
+        grid=(n, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda ni, ki, qi: (ni, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, ki, qi: (ni, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, ki, qi: (ni, ki, 0)),
+            pl.BlockSpec((1, block_q, d), lambda ni, ki, qi: (ni, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda ni, ki, qi: (ni, qi)),
+            pl.BlockSpec((1, block_q), lambda ni, ki, qi: (ni, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda ni, ki, qi: (ni, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ni, ki, qi: (ni, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s, d), q.dtype),
+            jax.ShapeDtypeStruct((n, s, d), q.dtype),
+        ],
+        scratch_shapes=[_scratch((block_k, d)), _scratch((block_k, d))],
+        interpret=interpret,
+    )(q, k, v, do, lse, dvec)
+    return dq, dk, dv

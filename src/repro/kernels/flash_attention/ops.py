@@ -1,0 +1,81 @@
+"""Jit'd wrapper for flash attention: GQA folding, layout adapters, and a
+custom VJP whose backward pass is also a pair of Pallas kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd_kernels,
+    flash_attention_kernel,
+)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa(q, k, v, causal, window, block_q, block_k, interpret):
+    out, _ = flash_attention_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    out, lse = flash_attention_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_k, interpret, res, do):
+    q, k, v, out, lse = res
+    dvec = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    dq, dk, dv = flash_attention_bwd_kernels(
+        q, k, v, do, lse, dvec,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return dq, dk, dv
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+@partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,   # [B, S, H, D] (model layout)
+    k: jnp.ndarray,   # [B, S, Hkv, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Differentiable flash attention in the model's [B, S, H, D] layout with
+    GQA support (the KV-head repeat is outside the VJP, so group gradients
+    sum automatically)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    to_nsd = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = _fa(
+        to_nsd(q), to_nsd(k), to_nsd(v),
+        causal, window, min(block_q, s), min(block_k, s), interpret,
+    )
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention TPU kernel.
+
+Plain MHA layout: q, k, v [N, S, D] with N = batch*heads (GQA folding is done
+by the ops wrapper).  Causal and sliding-window masks match
+repro.models.attention semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    n, s, d = q.shape
+    scores = jnp.einsum("nqd,nkd->nqk", q, k).astype(jnp.float32) * d**-0.5
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    scores = jnp.where(ok[None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("nqk,nkd->nqd", probs, v.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.rglru_scan.ops import rglru_scan, rglru_scan_ref  # noqa: F401

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: blocked RG-LRU linear recurrence.
+
+The recurrence h_t = a_t h_{t-1} + b_t is elementwise over the width axis, so
+the natural TPU decomposition is:
+
+  * width  -> independent ``block_w`` lanes (grid axis, parallel/shardable)
+  * time   -> ``block_s`` chunks streamed HBM->VMEM (grid axis, sequential),
+              with the running state h carried in VMEM scratch
+  * within a chunk -> an in-register ``fori_loop`` over the ``block_s`` rows
+              (VPU elementwise; rows are [1, block_w] vectors)
+
+This keeps HBM traffic at exactly one read of (x, r, i) and one write of y —
+the recurrence itself never touches HBM — and mirrors how the RecurrentGemma
+TPU kernel is structured (hardware-adaptation notes in DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_C = 8.0
+
+
+def _kernel(x_ref, r_ref, i_ref, lam_ref, y_ref, hlast_ref, h_scr, *, block_s, n_s):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    softplus_neg_lam = jnp.logaddexp(0.0, -lam_ref[...])     # [1, bw]
+    x = x_ref[0].astype(jnp.float32)                          # [bs, bw]
+    r = r_ref[0].astype(jnp.float32)
+    gi = i_ref[0].astype(jnp.float32)
+    log_a = -_C * r * softplus_neg_lam
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * (gi * x)
+
+    def step(t, h):
+        h = a[t][None, :] * h + b[t][None, :]
+        y_ref[0, t, :] = h[0].astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        hlast_ref[0] = h[0].astype(hlast_ref.dtype)
+
+
+def rglru_scan_kernel(
+    x: jnp.ndarray,      # [B, S, W]
+    r: jnp.ndarray,
+    i: jnp.ndarray,
+    lam: jnp.ndarray,    # [W]
+    *,
+    block_s: int = 128,
+    block_w: int = 512,
+    interpret: bool = False,
+):
+    bsz, s, w = x.shape
+    block_s = min(block_s, s)
+    block_w = min(block_w, w)
+    assert s % block_s == 0 and w % block_w == 0, (s, w, block_s, block_w)
+    n_s, n_w = s // block_s, w // block_w
+    lam2 = lam.reshape(1, w)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, n_s=n_s),
+        grid=(bsz, n_w, n_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi, si: (0, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi, si: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(x, r, i, lam2)

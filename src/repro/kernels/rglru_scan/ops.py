@@ -1,0 +1,40 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def rglru_scan(
+    x: jnp.ndarray,
+    r: jnp.ndarray,
+    i: jnp.ndarray,
+    lam: jnp.ndarray,
+    *,
+    block_s: int = 128,
+    block_w: int = 512,
+    interpret: bool | None = None,
+):
+    """RG-LRU recurrence over [B, S, W]. Returns (y, h_last)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    s, w = x.shape[1], x.shape[2]
+    block_s = min(block_s, s)
+    block_w = min(block_w, w)
+    while s % block_s:
+        block_s //= 2
+    while w % block_w:
+        block_w //= 2
+    return rglru_scan_kernel(
+        x, r, i, lam, block_s=max(1, block_s), block_w=max(1, block_w),
+        interpret=interpret,
+    )
+
+
+__all__ = ["rglru_scan", "rglru_scan_ref"]

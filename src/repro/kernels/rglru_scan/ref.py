@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel: sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(
+    x: jnp.ndarray,      # [B, S, W]
+    r: jnp.ndarray,      # [B, S, W] recurrence gate (sigmoid output)
+    i: jnp.ndarray,      # [B, S, W] input gate (sigmoid output)
+    lam: jnp.ndarray,    # [W] Lambda parameter
+    h0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), a_t = exp(-8 r_t softplus(-lam))."""
+    log_a = -8.0 * r * jax.nn.softplus(-lam)[None, None, :]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = mult * (i * x)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    init = h0 if h0 is not None else jnp.zeros(x.shape[::2], x.dtype)  # [B, W]
+    h_last, ys = jax.lax.scan(step, init, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_last

@@ -1,0 +1,1 @@
+from repro.kernels.rolann_stats.ops import rolann_stats, rolann_stats_ref  # noqa: F401

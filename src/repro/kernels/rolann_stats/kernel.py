@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused ROLANN sufficient statistics.
+
+One pass over the sample axis computes, per output neuron o,
+
+    G[o] += (X_tile * fsq[o]) @ X_tile^T        (MXU)
+    M[o] += X_tile @ fd[o]                      (MXU, rank-1 of the same tile)
+
+instead of three separate HBM passes (scale, Gram matmul, M matvec).  The
+sample axis is streamed HBM->VMEM in ``block_n`` tiles; the [m, m]
+accumulator lives in VMEM scratch across the sequential ``n`` grid dimension
+(arithmetic intensity ~ m FLOPs/byte vs ~1 for the unfused chain).
+
+Grid: (outputs, n_tiles) — n iterates innermost (sequential on TPU), so the
+accumulator carries correctly; outputs are independent (parallelizable /
+shardable over the ``model`` mesh axis at the ops level).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, fsq_ref, fd_ref, g_ref, m_ref, *, n_tiles: int):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    x = x_ref[...]                       # [m, bn]
+    fsq = fsq_ref[...]                   # [1, bn]
+    fd = fd_ref[...]                     # [1, bn]
+    scaled = x * fsq                     # VPU
+    g_ref[0] += jax.lax.dot_general(
+        scaled, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] += jax.lax.dot_general(
+        x, fd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).T
+
+
+def rolann_stats_kernel(
+    xa: jnp.ndarray,       # [m, n]
+    fsq: jnp.ndarray,      # [o, n]
+    fd: jnp.ndarray,       # [o, n]
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    m, n = xa.shape
+    o = fsq.shape[0]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_tiles=n_tiles),
+        grid=(o, n_tiles),
+        in_specs=[
+            pl.BlockSpec((m, block_n), lambda oi, ni: (0, ni)),
+            pl.BlockSpec((1, block_n), lambda oi, ni: (oi, ni)),
+            pl.BlockSpec((1, block_n), lambda oi, ni: (oi, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, m), lambda oi, ni: (oi, 0, 0)),
+            pl.BlockSpec((1, m), lambda oi, ni: (oi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((o, m, m), jnp.float32),
+            jax.ShapeDtypeStruct((o, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xa, fsq, fd)

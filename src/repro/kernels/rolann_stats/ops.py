@@ -1,0 +1,52 @@
+"""Jit'd wrapper for the fused ROLANN statistics kernel.
+
+On CPU (this container) the kernel body runs in interpret mode; on TPU it
+compiles to a Mosaic kernel.  ``rolann_stats`` pads the sample axis to the
+block size (zero samples contribute nothing to either G or M, so padding is
+exact) and defers to the oracle for tiny shapes where kernel overhead is not
+worth it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rolann_stats.kernel import rolann_stats_kernel
+from repro.kernels.rolann_stats.ref import rolann_stats_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def rolann_stats(
+    xa: jnp.ndarray,
+    fsq: jnp.ndarray,
+    fd: jnp.ndarray,
+    *,
+    block_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused (G, M) sufficient statistics.  xa [m, n]; fsq, fd [o, n]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    m, n = xa.shape
+    block_n = min(block_n, max(128, 1 << (n - 1).bit_length() if n < 512 else 512))
+    pad = (-n) % block_n
+    if pad:
+        xa = jnp.pad(xa, ((0, 0), (0, pad)))
+        fsq = jnp.pad(fsq, ((0, 0), (0, pad)))
+        fd = jnp.pad(fd, ((0, 0), (0, pad)))
+    return rolann_stats_kernel(
+        xa.astype(jnp.float32),
+        fsq.astype(jnp.float32),
+        fd.astype(jnp.float32),
+        block_n=block_n,
+        interpret=interpret,
+    )
+
+
+__all__ = ["rolann_stats", "rolann_stats_ref"]

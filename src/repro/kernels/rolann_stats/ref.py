@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused ROLANN sufficient-statistics kernel.
+
+Given the augmented input matrix ``xa`` [m, n], per-output derivative squares
+``fsq`` [o, n] and weighted targets ``fd = f'^2 * dbar`` [o, n], compute
+
+    G[o] = xa @ diag(fsq[o]) @ xa^T      [o, m, m]
+    M[o] = xa @ fd[o]                    [o, m]
+
+— the paper's Eq. 6-7 in Gram form (DESIGN.md §1), the compute hot-spot of
+DAEF training (O(o * m^2 * n)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rolann_stats_ref(xa: jnp.ndarray, fsq: jnp.ndarray, fd: jnp.ndarray):
+    g = jnp.einsum("in,on,jn->oij", xa, fsq, xa)
+    m = jnp.einsum("in,on->oi", xa, fd)
+    return g, m

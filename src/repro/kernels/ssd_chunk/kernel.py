@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (intra + inter chunk fused).
+
+Per grid step (bh, chunk) with the chunk axis sequential:
+
+  intra:  scores = (C B^T) ⊙ exp(cum_i - cum_j) (causal)      -> MXU
+          y_intra = scores @ (x·dt)                            -> MXU
+  inter:  y += exp(cum) ⊙ (C @ h_prev^T)                       -> MXU
+  state:  h = h_prev · exp(cum_last) + ((x·dt) ⊙ decay_end)^T B -> MXU
+
+The [P, N] SSM state lives in VMEM scratch across the sequential chunk
+dimension — the entire recurrence never touches HBM, and all four stages are
+128-aligned matmuls (Q=chunk, N=state, P=head_dim), which is the TPU-native
+rendering of the SSD paper's Listing 1 (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(xdt_ref, la_ref, b_ref, c_ref, y_ref, hlast_ref, h_scr, *, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)    # [Q, P]
+    la = la_ref[0].astype(jnp.float32)      # [Q] via [1, Q] block -> squeeze
+    b = b_ref[0].astype(jnp.float32)        # [Q, N]
+    c = c_ref[0].astype(jnp.float32)        # [Q, N]
+    q = xdt.shape[0]
+
+    cum = jnp.cumsum(la, axis=-1)           # [Q]
+    seg = cum[:, None] - cum[None, :]       # cum_i - cum_j
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    )
+    decay_mat = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * decay_mat                           # [Q, Q]
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # [Q, P]
+
+    # inter-chunk: contribution of the carried state.
+    h_prev = h_scr[...]                     # [P, N]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: h = h_prev * exp(cum_last) + (xdt ⊙ decay_end)^T b -> wait
+    # h is [P, N]: sum_k decay_end_k * xdt_k P-vec outer b_k N-vec.
+    decay_end = jnp.exp(cum[-1] - cum)      # [Q]
+    h_new = h_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xdt * decay_end[:, None], b,
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                       # [P, N]
+    h_scr[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hlast_ref[0] = h_new.astype(hlast_ref.dtype)
+
+
+def ssd_chunk_kernel(
+    xdt: jnp.ndarray,   # [BH, S, P]
+    la: jnp.ndarray,    # [BH, S]
+    b: jnp.ndarray,     # [BH, S, N]
+    c: jnp.ndarray,     # [BH, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bi, ci: (bi, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt, la, b, c)

@@ -1,0 +1,38 @@
+"""Jit'd wrapper for the fused SSD chunk-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_kernel
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk(
+    xdt: jnp.ndarray,
+    la: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 256,
+    interpret: bool | None = None,
+):
+    """Fused SSD scan. xdt [BH,S,P], la [BH,S], b/c [BH,S,N] ->
+    (y [BH,S,P], h_final [BH,P,N])."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    s = xdt.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    return ssd_chunk_kernel(
+        xdt.astype(jnp.float32), la.astype(jnp.float32),
+        b.astype(jnp.float32), c.astype(jnp.float32),
+        chunk=max(1, chunk), interpret=interpret,
+    )
+
+
+__all__ = ["ssd_chunk", "ssd_chunk_ref"]

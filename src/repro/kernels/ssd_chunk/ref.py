@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the sequential recurrence
+h_t = exp(la_t) * h_{t-1} + b_t (xdt_t)^T;  y_t = c_t @ h_t  (per batch*head).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(
+    xdt: jnp.ndarray,   # [BH, S, P]  (x * dt)
+    la: jnp.ndarray,    # [BH, S]     log decay per step (<= 0)
+    b: jnp.ndarray,     # [BH, S, N]
+    c: jnp.ndarray,     # [BH, S, N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [BH, S, P], h_final [BH, P, N])."""
+
+    def scan_one(xdt1, la1, b1, c1):
+        def step(h, t):
+            x_t, la_t, b_t, c_t = t
+            h = jnp.exp(la_t) * h + x_t[:, None] * b_t[None, :]
+            return h, c_t @ h.T
+        n = b1.shape[-1]
+        p = xdt1.shape[-1]
+        h0 = jnp.zeros((p, n), jnp.float32)
+        h_last, ys = jax.lax.scan(step, h0, (xdt1, la1, b1, c1))
+        return ys, h_last
+
+    return jax.vmap(scan_one)(xdt, la, b, c)

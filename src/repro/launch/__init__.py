@@ -1,0 +1,1 @@
+"""Launcher: mesh construction, sharding rules, step builders, dry-run, roofline."""

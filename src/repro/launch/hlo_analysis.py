@@ -1,0 +1,333 @@
+"""Loop-aware post-SPMD HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body once, so anything
+inside ``lax.scan`` (layer stacks, microbatch accumulation, chunked
+attention) is under-reported by its trip count.  This module parses the
+optimized HLO text into a computation graph and evaluates, per computation
+and recursively through ``while``/``call``/``fusion``/``conditional`` edges
+with trip-count multipliers:
+
+  * dot/convolution FLOPs (2 * M * N * K from the shapes — the MXU work)
+  * collective operand bytes per kind (all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute)
+
+Trip counts come from the loop-condition constant (scan lowers to a
+``compare(counter, constant)`` condition).  The result reflects remat
+recompute and per-layer collectives faithfully — this is the §Roofline
+source (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# Computation headers start at column 0: "%name (params) -> type {" or
+# "ENTRY %name (...) -> type {".  Params may contain nested parens, so match
+# only the name prefix.
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result: str          # raw result type string
+    opcode: str
+    rest: str            # text after opcode
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+    shapes: dict         # op name -> result type string
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    current: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        # Headers start at column 0 (ops are indented) and open a brace.
+        if line and not line[0].isspace():
+            header = _COMP_HEADER.match(line)
+            if header and line.endswith("{") and "->" in line:
+                current = _Computation(name=header.group(1), ops=[], shapes={})
+                comps[current.name] = current
+                continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs: "<type> <opcode>(...)" where type may be a tuple "(...)".
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    type_str, rest = rhs[: i + 1], rhs[i + 1 :].strip()
+                    break
+        else:
+            sp = rhs.find(" ")
+            type_str, rest = rhs[:sp], rhs[sp + 1 :].strip()
+        opcode = rest.split("(", 1)[0].strip()
+        current.ops.append(_Op(name=name, result=type_str, opcode=opcode, rest=rest))
+        current.shapes[name] = type_str
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    call = rest[rest.find("(") + 1 :]
+    depth = 1
+    buf = []
+    for ch in call:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    inner = "".join(buf)
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def _attr(rest: str, key: str) -> str | None:
+    m = re.search(re.escape(key.rstrip("=")) + r"=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _known_trip_count(rest: str) -> int | None:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+    return int(m.group(1)) if m else None
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    """2 * (product of result dims) * (contracted size)."""
+    result_elems = sum(
+        _shape_elems(dims) for _, dims in _SHAPE_TOKEN.findall(op.result)
+    )
+    operands = _operand_names(op.rest)
+    if not operands:
+        return 0.0
+    lhs = shapes.get(operands[0], "")
+    m = _SHAPE_TOKEN.search(lhs)
+    if not m:
+        return 0.0
+    lhs_elems = _shape_elems(m.group(2))
+    # contracted size = lhs_elems * rhs_batchfree / result... robust shortcut:
+    # parse lhs_contracting_dims from the dot attributes.
+    cd = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", op.rest)
+    if cd:
+        dims = [int(x) for x in cd.group(1).split(",")]
+        lhs_dims = [int(x) for x in m.group(2).split(",") if x]
+        k = 1
+        for d in dims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        return 2.0 * result_elems * k
+    return 2.0 * result_elems * lhs_elems // max(1, result_elems)
+
+
+def _conv_flops(op: _Op, shapes: dict) -> float:
+    result_elems = sum(
+        _shape_elems(dims) for _, dims in _SHAPE_TOKEN.findall(op.result)
+    )
+    operands = _operand_names(op.rest)
+    if len(operands) < 2:
+        return 0.0
+    rhs = shapes.get(operands[1], "")
+    m = _SHAPE_TOKEN.search(rhs)
+    if not m:
+        return 0.0
+    kernel_elems = _shape_elems(m.group(2))
+    # flops ~= 2 * out_elems * kernel_elems / out_features  (rough, fine for
+    # the stub conv layers which are negligible anyway)
+    return 2.0 * result_elems * max(1, kernel_elems) ** 0.5
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    def scaled(self, k: float) -> "HloCosts":
+        out = HloCosts(flops=self.flops * k, hbm_bytes=self.hbm_bytes * k)
+        for key, v in self.collective_bytes.items():
+            out.collective_bytes[key] = v * k
+        return out
+
+    def add(self, other: "HloCosts") -> None:
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        for key, v in other.collective_bytes.items():
+            self.collective_bytes[key] += v
+
+
+# Ops whose operands+result plausibly move through HBM (post-fusion HLO is
+# scheduled; each top-level op is a kernel launch).  Used for the roofline
+# memory term: sum(operand bytes) + result bytes per executed op.
+_MEMORY_OPS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "scatter", "gather", "reduce", "transpose",
+    "concatenate", "pad", "reduce-window", "select-and-scatter", "sort",
+    "reverse", "slice", "iota", "broadcast", "convert", "rng-bit-generator",
+}
+
+
+def _io_bytes(op: _Op, shapes: dict) -> float:
+    base = op.opcode.removesuffix("-start").removesuffix("-done")
+    operands = _operand_names(op.rest)
+    if base == "dynamic-update-slice":
+        # Writes only the update slice (operand 1); reads it once.  Counting
+        # the whole accumulator would overstate scan-body traffic by the trip
+        # count.
+        upd = shapes.get(operands[1], "") if len(operands) > 1 else ""
+        return 2.0 * sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_TOKEN.findall(upd)
+        )
+    if base == "dynamic-slice":
+        return 2.0 * sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_TOKEN.findall(op.result)
+        )
+    total = sum(
+        _shape_bytes(dt, dims) for dt, dims in _SHAPE_TOKEN.findall(op.result)
+    )
+    for oname in operands:
+        tstr = shapes.get(oname)
+        if tstr:
+            total += sum(
+                _shape_bytes(dt, dims) for dt, dims in _SHAPE_TOKEN.findall(tstr)
+            )
+    return float(total)
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Extract N from a scan-style condition (compare(counter, constant N))."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant" and op.result.startswith("s32"):
+            m = re.search(r"constant\((-?\d+)\)", op.rest)
+            if m and int(m.group(1)) > 0:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def analyze_text(text: str) -> HloCosts:
+    comps = _parse_computations(text)
+    memo: dict[tuple, HloCosts] = {}
+
+    def cost_of(name: str, stack: tuple = (), mem: bool = True) -> HloCosts:
+        key = (name, mem)
+        if key in memo:
+            return memo[key]
+        if name not in comps or name in stack:
+            return HloCosts()
+        comp = comps[name]
+        total = HloCosts()
+        for op in comp.ops:
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if op.opcode.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                for oname in _operand_names(op.rest):
+                    tstr = comp.shapes.get(oname)
+                    if tstr is None:
+                        continue
+                    total.collective_bytes[base] += sum(
+                        _shape_bytes(dt, dims)
+                        for dt, dims in _SHAPE_TOKEN.findall(tstr)
+                    )
+                if mem:
+                    total.hbm_bytes += _io_bytes(op, comp.shapes)
+            elif base == "dot":
+                total.flops += _dot_flops(op, comp.shapes)
+                if mem:
+                    total.hbm_bytes += _io_bytes(op, comp.shapes)
+            elif base == "convolution":
+                total.flops += _conv_flops(op, comp.shapes)
+                if mem:
+                    total.hbm_bytes += _io_bytes(op, comp.shapes)
+            elif base == "while":
+                body = _attr(op.rest, "body=")
+                cond = _attr(op.rest, "condition=")
+                trips = _known_trip_count(op.rest)
+                if trips is None:
+                    trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    total.add(
+                        cost_of(body, stack + (name,), mem).scaled(max(1, trips))
+                    )
+            elif base in ("fusion", "call", "custom-call", "reduce", "map",
+                          "sort", "scatter", "select-and-scatter"):
+                callee = _attr(op.rest, "calls=")
+                if callee:
+                    # Fused/called bodies contribute FLOPs but their internal
+                    # ops do not touch HBM — only the call site does.
+                    total.add(cost_of(callee, stack + (name,), False))
+                if mem and base in _MEMORY_OPS:
+                    total.hbm_bytes += _io_bytes(op, comp.shapes)
+            elif base in _MEMORY_OPS:
+                if mem:
+                    total.hbm_bytes += _io_bytes(op, comp.shapes)
+            elif base == "conditional":
+                # Count the most expensive branch.
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", op.rest)
+                names = (
+                    re.findall(r"%([\w\.\-]+)", branches[0]) if branches else []
+                )
+                for attr in ("true_computation=", "false_computation="):
+                    b = _attr(op.rest, attr)
+                    if b:
+                        names.append(b)
+                if names:
+                    costs = [cost_of(b, stack + (name,), mem) for b in names]
+                    best = max(costs, key=lambda c: c.flops)
+                    total.add(best)
+        memo[key] = total
+        return total
+
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # Fall back: largest computation.
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else None
+    if entry is None:
+        return HloCosts()
+    return cost_of(entry)

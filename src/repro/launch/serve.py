@@ -1,0 +1,83 @@
+"""Serving launcher: prefill a batch of prompts, then decode tokens.
+
+CPU demo of the serve path (prefill + KV-cache decode) used by the
+decode-shape dry-runs.  Greedy sampling over synthetic prompts.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.data import synthetic
+from repro.models import get_bundle
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(registry.ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    prompts = jnp.asarray(
+        synthetic.lm_token_stream(cfg.vocab_size, args.prompt_len, args.batch, seed=1)
+    )
+    max_len = args.prompt_len + args.gen
+
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        frames = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.encoder_seq, cfg.d_model)
+        )
+        enc_out = encdec.encode(params, cfg, frames)
+        cache = encdec.init_cache(params, cfg, enc_out, max_len, jnp.float32)
+    else:
+        cache = bundle.init_cache(args.batch, max_len, jnp.float32)
+
+    decode = jax.jit(bundle.decode, donate_argnums=(1,))
+
+    # Prefill by stepping the prompt through the decode path (exercises the
+    # same cache-update the decode dry-run lowers).
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, cache, prompts[:, t : t + 1], jnp.asarray(t))
+    t_prefill = time.time() - t0
+
+    generated = []
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for t in range(args.prompt_len, max_len):
+        generated.append(tok)
+        logits, cache = decode(params, cache, tok, jnp.asarray(t))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_gen = time.time() - t0
+
+    gen = jnp.concatenate(generated, axis=1)
+    print(f"prompts [{args.batch}, {args.prompt_len}] -> generated {gen.shape}")
+    print("first sequence:", gen[0].tolist())
+    print(f"prefill {t_prefill:.2f}s; decode {t_gen / max(1, args.gen) * 1000:.1f} ms/token")
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

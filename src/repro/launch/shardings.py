@@ -1,0 +1,201 @@
+"""Sharding rules: params / optimizer state / inputs / decode caches.
+
+Megatron-style 2D layout on axes (data, model) — plus a leading 'pod' axis
+that extends data parallelism across pods:
+
+  * column-parallel weights (head/ffn/latent-up projections) shard their
+    output feature dim over ``model``;
+  * row-parallel weights (wo / w_down / out_proj) shard their input dim, so
+    XLA inserts the one all-reduce per block;
+  * expert weights shard the expert axis over ``model`` (expert parallelism);
+  * embedding/LM-head shard the vocab dim over ``model`` (logits + xent then
+    reduce over the sharded vocab);
+  * everything scanned has a leading layer axis which stays unsharded;
+  * an axis is only used when the dim is divisible by its size (e.g. batch=1
+    long-context decode falls back to replication on ``data``).
+
+These are *rules by parameter name*, applied to pytree paths, so every
+family (dense/MoE/MLA/SSD/RG-LRU/enc-dec/VLM) gets a coherent layout from
+one place.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import data_axes
+
+# output-feature-dim sharded (last dim)
+_COL_PAR = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_uq", "w_uk", "w_uv",
+    "w_x", "w1", "w2", "lm_head", "w_q",
+}
+# input-feature-dim sharded (second-to-last dim)
+_ROW_PAR = {"wo", "w_down", "w_out", "out_proj", "w_r", "w_i"}
+# 1-d params tied to a column-parallel output dim
+_COL_PAR_VEC = {"bq", "bk", "bv", "b_up"}
+
+
+def _mesh_axis_size(mesh: Mesh, axis: str) -> int:
+    return dict(mesh.shape)[axis]
+
+
+def _axis_ok(dim: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and dim % _mesh_axis_size(mesh, axis) == 0
+
+
+# Leaves larger than this get their biggest unsharded dim sharded over
+# ``data`` as well (ZeRO/FSDP-style) — parameters, gradients and Adam moments
+# all inherit it, which is what makes the 20B/236B configs fit 16 GiB chips.
+FSDP_MIN_ELEMENTS = 1 << 24
+
+
+def _with_fsdp(spec: list, shape, mesh: Mesh) -> P:
+    n = 1
+    for d in shape:
+        n *= d
+    if n >= FSDP_MIN_ELEMENTS and "data" in mesh.axis_names:
+        candidates = sorted(
+            (i for i in range(len(shape)) if spec[i] is None),
+            key=lambda i: -shape[i],
+        )
+        for i in candidates:
+            if _axis_ok(shape[i], mesh, "data"):
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    names = [n for n in names if isinstance(n, str)]
+    last = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+
+    def spec_tail(tail: list) -> list:
+        return [None] * (nd - len(tail)) + tail
+
+    if "experts" in names:
+        # [L, E, d, f] — expert-parallel over model; tensor-parallel within
+        # the expert FFN when the expert count does not divide (e.g. 60/16).
+        spec = [None] * nd
+        e_dim = nd - 3
+        if _axis_ok(shape[e_dim], mesh, "model"):
+            spec[e_dim] = "model"
+        elif last in ("w_gate", "w_up") and _axis_ok(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+        elif last == "w_down" and _axis_ok(shape[-2], mesh, "model"):
+            spec[-2] = "model"
+        return _with_fsdp(spec, shape, mesh)
+    if last == "table":
+        # Vocab over model only — a 2D-sharded embedding table makes the
+        # SPMD gather path pathological; the table is modest per-device.
+        spec = [None] * nd
+        if _axis_ok(shape[0], mesh, "model"):
+            spec[0] = "model"
+        return P(*spec)
+    if last == "dec_pos":
+        return P()
+    if last in _COL_PAR and nd >= 2:
+        spec = spec_tail([None, "model" if _axis_ok(shape[-1], mesh, "model") else None])
+        return _with_fsdp(spec, shape, mesh)
+    if last in _ROW_PAR and nd >= 2:
+        spec = spec_tail(["model" if _axis_ok(shape[-2], mesh, "model") else None, None])
+        return _with_fsdp(spec, shape, mesh)
+    if last in _COL_PAR_VEC and nd >= 1:
+        return (
+            P(*spec_tail(["model"])) if _axis_ok(shape[-1], mesh, "model") else P()
+        )
+    # Un-named big weights (mamba in_proj, projector, conv) still get FSDP.
+    if nd >= 2:
+        return _with_fsdp([None] * nd, shape, mesh)
+    return P()
+
+
+def param_shardings(params_shape: Any, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params_shape,
+    )
+
+
+def opt_state_shardings(opt_state_shape: Any, params_shardings: Any, mesh: Mesh):
+    """Adam moments mirror parameter shardings; scalars replicate."""
+    flat_params = jax.tree.leaves(params_shardings)
+
+    def visit(leaf_idx, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return None
+
+    # AdamState(step, mu, nu): mu/nu are param-shaped trees.
+    from repro.optim.adam import AdamState
+
+    def shard_like_params(tree_shape):
+        flat, treedef = jax.tree.flatten(tree_shape)
+        assert len(flat) == len(flat_params), (len(flat), len(flat_params))
+        return treedef.unflatten(flat_params)
+
+    if isinstance(opt_state_shape, AdamState):
+        return AdamState(
+            step=NamedSharding(mesh, P()),
+            mu=shard_like_params(opt_state_shape.mu),
+            nu=shard_like_params(opt_state_shape.nu),
+        )
+    # Fallback: replicate anything unknown.
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_state_shape)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh):
+    """Inputs: batch dim over (pod, data); everything else replicated."""
+    dp = data_axes(mesh)
+
+    total = int(np.prod([_mesh_axis_size(mesh, a) for a in dp]))
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        parts: list = [None] * nd
+        if nd and leaf.shape[0] % total == 0:
+            parts[0] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(spec, batch_specs)
+
+
+def cache_shardings(cache_specs: Any, cfg: ArchConfig, mesh: Mesh):
+    """Decode caches: batch over (pod,data); heads over model when divisible,
+    otherwise the sequence dim over model (flash-decoding style)."""
+    dp = data_axes(mesh)
+    dp_total = int(np.prod([_mesh_axis_size(mesh, a) for a in dp]))
+
+    def spec(leaf) -> NamedSharding:
+        shape = leaf.shape
+        nd = len(shape)
+        parts: list = [None] * nd
+        if nd >= 2:
+            # Leading dim is the stacked layer/period axis; batch is dim 1 for
+            # caches, dim 0 for unstacked ones — find the batch dim as the
+            # first dim divisible by the data extent.
+            b_dim = 1 if nd >= 3 else 0
+            if shape[b_dim] % dp_total == 0:
+                parts[b_dim] = dp if len(dp) > 1 else dp[0]
+        if nd >= 4:
+            # [L, B, S, H(, hd)] — prefer heads over model, else sequence.
+            h_dim = 3
+            s_dim = 2
+            if nd >= 5 and _axis_ok(shape[h_dim], mesh, "model"):
+                parts[h_dim] = "model"
+            elif _axis_ok(shape[s_dim], mesh, "model"):
+                parts[s_dim] = "model"
+        elif nd == 3 and shape[-1] % _mesh_axis_size(mesh, "model") == 0:
+            # e.g. RecState.lru [Pd, B, W] — width over model.
+            parts[-1] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(spec, cache_specs)

@@ -1,0 +1,94 @@
+"""Step functions the launcher jits: train (with microbatch gradient
+accumulation), prefill, and decode.
+
+The train step folds the optimizer update in (params, opt_state, batch) ->
+(params, opt_state, loss): this is the realistic unit the dry-run lowers,
+so the roofline sees gradients + optimizer traffic, not just the forward.
+
+Microbatching reshapes the global batch [B, ...] -> [M, B/M, ...] and scans,
+accumulating f32 gradients; peak live activations are one microbatch. This is
+what lets 40-60-layer configs at seq 4096 fit HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models.api import ModelBundle
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    opt: optim.Optimizer,
+    *,
+    microbatches: int = 1,
+    clip_norm: float | None = 1.0,
+    accum_dtype=jnp.float32,
+) -> Callable:
+    """``accum_dtype``: dtype of the microbatch gradient accumulator.
+    float32 is the default; bfloat16 halves the two largest live trees of a
+    big-model step (accumulator + final grads) at a small stochastic cost —
+    a §Perf memory lever (EXPERIMENTS.md)."""
+
+    def loss_fn(params, batch):
+        return bundle.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_sum, grads_sum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), grads_sum, grads
+                )
+                return (loss_sum + loss, grads), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), micro
+            )
+            loss = loss / microbatches
+            # Keep the accumulator dtype: casting the whole tree to f32 here
+            # would materialize a full-size copy before the (fused) optimizer
+            # kernels convert per-element anyway.
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        if clip_norm is not None:
+            # Fold the clip scale into the per-leaf update math instead of
+            # materializing a clipped copy of the gradient tree.
+            norm = optim.global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / (norm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle) -> Callable:
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return bundle.decode(params, cache, token, pos)
+
+    return decode_step

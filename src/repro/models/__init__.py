@@ -1,0 +1,2 @@
+"""Architecture zoo: six families behind one ModelBundle interface."""
+from repro.models.api import ModelBundle, cache_specs, get_bundle  # noqa: F401

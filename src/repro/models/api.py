@@ -1,0 +1,270 @@
+"""ModelBundle — the uniform interface the launcher/dry-run drives.
+
+Per family it wires up:
+  init(key, dtype)                 -> params
+  loss(params, batch)              -> scalar (training objective)
+  prefill(params, batch)           -> last-token logits  (serve prefill)
+  init_cache(batch, seq, dtype)    -> decode cache pytree (zeros; the dry-run
+                                      replaces it with ShapeDtypeStructs)
+  decode(params, cache, token, pos)-> (logits, cache)    (serve decode step)
+  input_specs(shape, dtype)        -> {name: ShapeDtypeStruct} for the shape
+
+``batch`` dicts by family:
+  dense/moe/ssm/hybrid : {tokens [B,S]}
+  vlm                  : {tokens [B,S], patch_embeds [B,P,d_frontend]}
+  encdec               : {tokens [B,S], frames [B,T_enc,d_model]}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import InputShape
+from repro.models import encdec, mamba2, moe_lm, rglru, transformer, vlm
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Array]
+    prefill: Callable[..., Array]
+    init_cache: Callable[..., Any]
+    decode: Callable[..., tuple[Array, Any]]
+    input_specs: Callable[..., dict[str, Any]]
+
+
+def _token_specs(shape: InputShape, dtype=jnp.int32) -> dict[str, Any]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), dtype)
+    }
+
+
+def get_bundle(cfg: ArchConfig, *, chunked_attn: bool = True) -> ModelBundle:
+    fam = cfg.family
+    long_seq = chunked_attn  # chunk the attention for long prefill shapes
+
+    if fam in ("dense",):
+        mod = transformer
+
+        def loss(params, batch):
+            return mod.lm_loss(params, cfg, batch["tokens"], chunked_attn=long_seq)
+
+        def prefill(params, batch):
+            h = mod.forward(
+                params, cfg, batch["tokens"], chunked_attn=long_seq, remat=False
+            )
+            w = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+            return (h[:, -1:] @ (w.T if cfg.tie_embeddings else w))
+
+        def init_cache(batch_size, seq_len, dtype):
+            return mod.init_cache(cfg, batch_size, seq_len, dtype)
+
+        def decode(params, cache, token, pos):
+            return mod.decode_step(params, cfg, cache, token, pos)
+
+        def input_specs(shape: InputShape, dtype=jnp.float32):
+            return _token_specs(shape)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: mod.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            init_cache=init_cache,
+            decode=decode,
+            input_specs=input_specs,
+        )
+
+    if fam == "vlm":
+        def loss(params, batch):
+            return vlm.lm_loss(
+                params, cfg, batch["patch_embeds"], batch["tokens"],
+                chunked_attn=long_seq,
+            )
+
+        def prefill(params, batch):
+            prefix = vlm.project(params, batch["patch_embeds"])
+            h = transformer.forward(
+                params, cfg, batch["tokens"], prefix_embeds=prefix,
+                chunked_attn=long_seq, remat=False,
+            )
+            return h[:, -1:] @ params["lm_head"]
+
+        def init_cache(batch_size, seq_len, dtype):
+            return transformer.init_cache(cfg, batch_size, seq_len, dtype)
+
+        def decode(params, cache, token, pos):
+            return transformer.decode_step(params, cfg, cache, token, pos)
+
+        def input_specs(shape: InputShape, dtype=jnp.float32):
+            specs = _token_specs(shape)
+            if shape.kind != "decode":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.n_patches, cfg.d_frontend), dtype
+                )
+            return specs
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: vlm.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            init_cache=init_cache,
+            decode=decode,
+            input_specs=input_specs,
+        )
+
+    if fam == "moe":
+        def loss(params, batch):
+            return moe_lm.lm_loss(params, cfg, batch["tokens"], chunked_attn=long_seq)
+
+        def prefill(params, batch):
+            h, _ = moe_lm.forward(
+                params, cfg, batch["tokens"], chunked_attn=long_seq, remat=False
+            )
+            w = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+            return h[:, -1:] @ (w.T if cfg.tie_embeddings else w)
+
+        def init_cache(batch_size, seq_len, dtype):
+            return moe_lm.init_cache(cfg, batch_size, seq_len, dtype)
+
+        def decode(params, cache, token, pos):
+            return moe_lm.decode_step(params, cfg, cache, token, pos)
+
+        def input_specs(shape: InputShape, dtype=jnp.float32):
+            return _token_specs(shape)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: moe_lm.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            init_cache=init_cache,
+            decode=decode,
+            input_specs=input_specs,
+        )
+
+    if fam == "ssm":
+        def loss(params, batch):
+            return mamba2.lm_loss(params, cfg, batch["tokens"])
+
+        def prefill(params, batch):
+            h = mamba2.forward(params, cfg, batch["tokens"], remat=False)
+            return h[:, -1:] @ params["embed"]["table"].T
+
+        def init_cache(batch_size, seq_len, dtype):
+            return mamba2.init_cache(cfg, batch_size, seq_len, dtype)
+
+        def decode(params, cache, token, pos):
+            return mamba2.decode_step(params, cfg, cache, token, pos)
+
+        def input_specs(shape: InputShape, dtype=jnp.float32):
+            return _token_specs(shape)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: mamba2.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            init_cache=init_cache,
+            decode=decode,
+            input_specs=input_specs,
+        )
+
+    if fam == "hybrid":
+        def loss(params, batch):
+            return rglru.lm_loss(params, cfg, batch["tokens"], chunked_attn=long_seq)
+
+        def prefill(params, batch):
+            h = rglru.forward(
+                params, cfg, batch["tokens"], chunked_attn=long_seq, remat=False
+            )
+            return h[:, -1:] @ params["embed"]["table"].T
+
+        def init_cache(batch_size, seq_len, dtype):
+            return rglru.init_cache(cfg, batch_size, seq_len, dtype)
+
+        def decode(params, cache, token, pos):
+            return rglru.decode_step(params, cfg, cache, token, pos)
+
+        def input_specs(shape: InputShape, dtype=jnp.float32):
+            return _token_specs(shape)
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: rglru.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            init_cache=init_cache,
+            decode=decode,
+            input_specs=input_specs,
+        )
+
+    if fam == "encdec":
+        def loss(params, batch):
+            return encdec.lm_loss(params, cfg, batch["frames"], batch["tokens"])
+
+        def prefill(params, batch):
+            enc_out = encdec.encode(params, cfg, batch["frames"])
+            h = encdec.decode_train(params, cfg, enc_out, batch["tokens"])
+            return h[:, -1:] @ params["embed"]["table"].T
+
+        def init_cache(batch_size, seq_len, dtype):
+            # Encoder output is part of the decode-state (cross-KV); zeros here,
+            # ShapeDtypeStructs in the dry-run.
+            enc_out = jnp.zeros((batch_size, cfg.encoder_seq, cfg.d_model), dtype)
+            params = None  # cross_kv needs params; see api.init_cache_with_params
+            raise NotImplementedError(
+                "enc-dec cache needs params; use encdec_cache_specs / "
+                "encdec.init_cache directly"
+            )
+
+        def decode(params, cache, token, pos):
+            return encdec.decode_step(params, cfg, cache, token, pos)
+
+        def input_specs(shape: InputShape, dtype=jnp.float32):
+            specs = _token_specs(shape)
+            if shape.kind != "decode":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.encoder_seq, cfg.d_model), dtype
+                )
+            return specs
+
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: encdec.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            init_cache=init_cache,
+            decode=decode,
+            input_specs=input_specs,
+        )
+
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def cache_specs(
+    bundle: ModelBundle, batch: int, seq_len: int, dtype
+) -> Any:
+    """ShapeDtypeStruct pytree for the decode cache (no allocation)."""
+    cfg = bundle.cfg
+    if cfg.family == "encdec":
+        from repro.models import attention as attn_mod
+
+        shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+        xshape = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_heads, cfg.head_dim)
+        sd = lambda s: jax.ShapeDtypeStruct(s, dtype)
+        return encdec.EncDecCache(
+            self_kv=attn_mod.KVCache(k=sd(shape), v=sd(shape)),
+            cross_kv=(sd(xshape), sd(xshape)),
+        )
+    return jax.eval_shape(
+        lambda: bundle.init_cache(batch, seq_len, dtype)
+    )

@@ -1,0 +1,180 @@
+"""Shared model components: norms, MLPs, embeddings, RoPE, losses, init.
+
+All modules are functional: ``init_*`` returns a params dict, ``apply``-style
+functions take (params, inputs).  Parameters are plain nested dicts so the
+launcher can attach sharding rules by path-name matching.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init (LLM standard)."""
+    fan_in = shape[0]
+    std = scale if scale is not None else fan_in**-0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> Array:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int, dtype) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind: str, p: Params, x: Array) -> Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, kind: str, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {  # gelu_mlp (whisper-style 2-matrix MLP with bias)
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp(p: Params, kind: str, x: Array) -> Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return (jax.nn.gelu(x @ p["w_up"] + p["b_up"])) @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies [head_dim//2] (float32)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, theta)
+    angles = positions[..., :, None, None].astype(jnp.float32) * inv  # [..., S,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings [seq, d] (float32)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": embed_init(key, (vocab, d), dtype)}
+
+
+def embed(p: Params, tokens: Array) -> Array:
+    return p["table"][tokens]
+
+
+def logits_from_hidden(h: Array, emb: Params, w_out: Array | None) -> Array:
+    """LM head: tied embedding transpose or a separate output matrix."""
+    if w_out is not None:
+        return h @ w_out
+    return h @ emb["table"].T
+
+
+def chunked_softmax_xent(
+    h: Array,
+    labels: Array,
+    mask: Array,
+    emb_or_w: Array,
+    *,
+    chunk: int = 1024,
+    transpose: bool = False,
+) -> Array:
+    """Cross-entropy over a large vocab without materializing [T, V] logits.
+
+    h: [B, S, d]; labels/mask: [B, S]; emb_or_w: [V, d] (transpose=True) or
+    [d, V].  Scans over sequence chunks: the peak live logits tensor is
+    [B, chunk, V].  Returns mean NLL over masked positions (float32).
+    """
+    b, s, d = h.shape
+    n_chunks = max(1, s // chunk)
+    chunk = s // n_chunks
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+
+    hs = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)          # [C,B,c,d]
+    ls = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)        # [C,B,c]
+    ms = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        total, count = carry
+        hc, lc, mc = xs
+        logits = (hc @ emb_or_w.T if transpose else hc @ emb_or_w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (total + nll.sum(), count + mc.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls, ms)
+    )
+    return total / jnp.maximum(count, 1.0)

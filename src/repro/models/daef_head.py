@@ -1,0 +1,86 @@
+"""DAEF head — the paper's technique attached to any backbone (DESIGN.md §4).
+
+Wraps repro.core.daef around transformer hidden states: fit NON-ITERATIVELY
+on pooled activations of in-distribution traffic, then score new sequences by
+reconstruction error.  Works with every ModelBundle family (it only consumes
+activation matrices), federates across data shards (fit_on_mesh), and never
+ships raw activations between nodes — the deployment story of
+examples/llm_feature_anomaly.py as a library component.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anomaly, daef
+from repro.core.sharded import fit_on_mesh
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class DAEFHead:
+    """A fitted DAEF anomaly head over backbone features."""
+
+    cfg: daef.DAEFConfig
+    model: daef.DAEFModel
+    mean: Array       # feature standardization (fit on normal data)
+    std: Array
+    threshold: Array
+
+    def score(self, feats: Array) -> Array:
+        """feats [n, d] -> per-sample reconstruction error."""
+        x = ((feats - self.mean) / self.std).T
+        return daef.reconstruction_error(self.cfg, self.model, x)
+
+    def flag(self, feats: Array) -> Array:
+        """1 = anomalous (error above the fitted threshold)."""
+        return anomaly.classify(self.score(feats), self.threshold)
+
+
+def default_config(d_model: int, *, latent_frac: int = 8) -> daef.DAEFConfig:
+    return daef.DAEFConfig(
+        layer_sizes=(d_model, d_model // latent_frac, d_model // 4, d_model),
+        lam_hidden=0.1,
+        lam_last=0.5,
+    )
+
+
+def fit_head(
+    feats: Array,
+    *,
+    cfg: daef.DAEFConfig | None = None,
+    rule: str = "q90",
+    n_partitions: int = 4,
+    mesh=None,
+    data_axes=("data",),
+) -> DAEFHead:
+    """Fit a DAEF head on normal-traffic features [n, d].
+
+    With ``mesh`` given, the fit runs on-mesh (each data shard = one
+    federated node); otherwise a host fit with ``n_partitions`` exercising
+    the same merge path.
+    """
+    feats = jnp.asarray(feats)
+    mean = feats.mean(axis=0)
+    std = feats.std(axis=0) + 1e-6
+    x = ((feats - mean) / std).T  # [d, n] — the paper's convention
+    if cfg is None:
+        cfg = default_config(x.shape[0])
+    if mesh is not None:
+        model = fit_on_mesh(cfg, x, mesh, data_axes=data_axes)
+    else:
+        model = daef.fit(cfg, x, n_partitions=n_partitions)
+    thr = anomaly.threshold(model.train_errors, rule)
+    return DAEFHead(cfg=cfg, model=model, mean=mean, std=std, threshold=thr)
+
+
+def pooled_features(
+    forward: Callable[[Array], Array], tokens: Array
+) -> Array:
+    """Mean-pool a backbone's hidden states into [batch, d] features."""
+    h = forward(tokens)
+    return np.asarray(h.mean(axis=1))

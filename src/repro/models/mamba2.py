@@ -1,0 +1,275 @@
+"""Mamba-2 (SSD — State Space Duality, arXiv:2405.21060).
+
+TPU adaptation: the SSD "chunked" algorithm is implemented as per-chunk
+matmuls (MXU-friendly) with a sequential ``lax.scan`` carrying the inter-chunk
+SSM state — the quadratic intra-chunk part and the recurrent inter-chunk part
+exactly as Listing 1 of the paper, in jnp.  Decoding is the O(1) recurrent
+update on the [H, P, N] state (no KV cache at all — this is why mamba2 runs
+the 500k-token decode shape natively).
+
+Shapes: tokens [B, S]; inner activations [B, S, H, P] (H heads, P head dim);
+B/C projections [B, S, G, N] (G groups, N state dim).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models import hints
+
+Array = jnp.ndarray
+Params = dict[str, Any]
+
+
+class Mamba2Cache(NamedTuple):
+    ssm: Array    # [L, B, H, P, N] inter-token SSM state
+    conv: Array   # [L, B, W-1, conv_channels] causal-conv tail
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.n_groups * cfg.ssm_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_layer(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    g, n = cfg.n_groups, cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z | x | B | C | dt].
+    d_proj = 2 * d_inner + 2 * g * n + n_heads
+    return {
+        "norm": common.init_rmsnorm(d, dtype),
+        "in_proj": common.dense_init(ks[0], (d, d_proj), dtype),
+        "conv_w": common.dense_init(ks[1], (cfg.conv_width, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": common.init_rmsnorm(d_inner, dtype),
+        "out_proj": common.dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k_emb, k_layers = jax.random.split(key)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(
+        jax.random.split(k_layers, cfg.n_layers)
+    )
+    return {
+        "embed": common.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        # mamba2 ties the LM head to the embedding (as in the released models)
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: Array):
+    d_inner, n_heads, _ = _dims(cfg)
+    g, n = cfg.n_groups, cfg.ssm_state
+    z, x, b, c, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + g * n, 2 * d_inner + 2 * g * n],
+        axis=-1,
+    )
+    return z, x, b, c, dt
+
+
+def _causal_conv(w: Array, bias: Array, x: Array) -> Array:
+    """Depthwise causal conv. x [B, S, C]; w [W, C]."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + bias)
+
+
+def ssd_chunked(
+    x: Array,      # [B, S, H, P] (pre-multiplied by nothing; dt applied inside)
+    dt: Array,     # [B, S, H] softplus'd step sizes
+    a: Array,      # [H] positive decay rates (A = -a)
+    b: Array,      # [B, S, G, N]
+    c: Array,      # [B, S, G, N]
+    chunk: int,
+    h0: Array | None = None,
+) -> tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # log-decay per step, cumulative within chunks.
+    la = (-a[None, None, :] * dt).reshape(bsz, nc, chunk, h)      # <= 0
+    cum = jnp.cumsum(la, axis=2)                                   # [B,nc,Q,H]
+
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b.reshape(bsz, nc, chunk, g, n)
+    cr = c.reshape(bsz, nc, chunk, g, n)
+
+    # Intra-chunk (quadratic, matmul-dominated).
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cr, br)              # [B,nc,G,Q,Q]
+    scores = jnp.repeat(scores, rep, axis=2)                       # [B,nc,H,Q,Q]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # cum_q - cum_k
+    l_mat = jnp.exp(
+        jnp.where(
+            (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[None, None, ..., None],
+            seg, -jnp.inf,
+        )
+    )                                                              # [B,nc,Q,Q,H]
+    att = scores * l_mat.transpose(0, 1, 4, 2, 3)                  # [B,nc,H,Q,Q]
+    xdt = xr * dtr[..., None]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", att, xdt)
+
+    # Per-chunk aggregated state contribution: sum_k decay_to_end * B_k (dt x)_k
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # [B,nc,Q,H]
+    brep = jnp.repeat(br, rep, axis=3)                             # [B,nc,Q,H,N]
+    chunk_states = jnp.einsum(
+        "bckhn,bckhp,bckh->bchpn", brep, xdt, decay_end
+    )                                                              # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # [B,nc,H]
+
+    # Inter-chunk recurrence.
+    def step(h_prev, xs):
+        cs, cd = xs  # [B,H,P,N], [B,H]
+        h_new = h_prev * cd[..., None, None] + cs
+        return h_new, h_prev
+
+    init = (
+        h0 if h0 is not None else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    h_final, h_prevs = jax.lax.scan(
+        step,
+        init,
+        (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)                               # [B,nc,H,P,N]
+
+    crep = jnp.repeat(cr, rep, axis=3)                             # [B,nc,Q,H,N]
+    decay_in = jnp.exp(cum)                                        # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", crep, h_prevs, decay_in)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, h_final
+
+
+def layer_fwd(layer: Params, cfg: ArchConfig, h_in: Array) -> Array:
+    """One mamba2 block (training/prefill)."""
+    d_inner, n_heads, _ = _dims(cfg)
+    p_dim = cfg.ssm_head_dim
+    x_norm = common.rmsnorm(layer["norm"], h_in)
+    z, x, b, c, dt = _split_proj(cfg, x_norm @ layer["in_proj"])
+    xbc = _causal_conv(
+        layer["conv_w"], layer["conv_b"], jnp.concatenate([x, b, c], axis=-1)
+    )
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + cfg.n_groups * cfg.ssm_state], -1)
+    bsz, s, _ = x.shape
+    x = x.reshape(bsz, s, n_heads, p_dim)
+    b = b.reshape(bsz, s, cfg.n_groups, cfg.ssm_state)
+    c = c.reshape(bsz, s, cfg.n_groups, cfg.ssm_state)
+    # SSD heads over the model axis (48 heads / 16-way), batch over data.
+    x = hints.hint(x, {0: ("pod", "data"), 2: "model"})
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + layer["dt_bias"])
+    a = jnp.exp(layer["a_log"])
+
+    y, _ = ssd_chunked(
+        x.astype(jnp.float32), dt, a,
+        b.astype(jnp.float32), c.astype(jnp.float32),
+        min(cfg.ssm_chunk, s),
+    )
+    y = y + layer["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(h_in.dtype)
+    y = common.rmsnorm(layer["gate_norm"], y * jax.nn.silu(z))
+    return h_in + y @ layer["out_proj"]
+
+
+def forward(params, cfg: ArchConfig, tokens: Array, *, remat: bool = True) -> Array:
+    h = common.embed(params["embed"], tokens)
+
+    def body(h, layer):
+        return layer_fwd(layer, cfg, h), None
+
+    step = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(step, h, params["layers"])
+    return common.rmsnorm(params["final_norm"], h)
+
+
+def lm_loss(params, cfg: ArchConfig, tokens: Array, *, loss_chunk: int = 1024) -> Array:
+    h = forward(params, cfg, tokens)
+    h_in, labels = h[:, :-1], tokens[:, 1:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    return common.chunked_softmax_xent(
+        h_in, labels, mask, params["embed"]["table"],
+        chunk=min(loss_chunk, h_in.shape[1]), transpose=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving (recurrent decode — O(1) per token)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype) -> Mamba2Cache:
+    del seq_len  # state size is independent of context length
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    return Mamba2Cache(
+        ssm=jnp.zeros(
+            (cfg.n_layers, batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        conv=jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_ch), dtype),
+    )
+
+
+def decode_step(
+    params, cfg: ArchConfig, cache: Mamba2Cache, token: Array, pos: Array
+) -> tuple[Array, Mamba2Cache]:
+    del pos
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    p_dim = cfg.ssm_head_dim
+    h = common.embed(params["embed"], token)  # [B,1,d]
+
+    def body(h, xs):
+        layer, ssm_state, conv_state = xs
+        x_norm = common.rmsnorm(layer["norm"], h)
+        z, x, b, c, dt = _split_proj(cfg, x_norm @ layer["in_proj"])
+        xbc = jnp.concatenate([x, b, c], axis=-1)          # [B,1,C]
+        window = jnp.concatenate([conv_state, xbc[:, 0:1]], axis=1)  # [B,W,C]
+        conv_out = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", window, layer["conv_w"]) + layer["conv_b"]
+        )
+        new_conv = window[:, 1:]
+        x, b, c = jnp.split(
+            conv_out, [d_inner, d_inner + cfg.n_groups * cfg.ssm_state], -1
+        )
+        bsz = x.shape[0]
+        x = x.reshape(bsz, n_heads, p_dim).astype(jnp.float32)
+        b = b.reshape(bsz, cfg.n_groups, cfg.ssm_state).astype(jnp.float32)
+        c = c.reshape(bsz, cfg.n_groups, cfg.ssm_state).astype(jnp.float32)
+        rep = n_heads // cfg.n_groups
+        b = jnp.repeat(b, rep, axis=1)
+        c = jnp.repeat(c, rep, axis=1)
+        dt_v = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + layer["dt_bias"])
+        decay = jnp.exp(-jnp.exp(layer["a_log"])[None, :] * dt_v)  # [B,H]
+        upd = jnp.einsum("bhp,bhn,bh->bhpn", x, b, dt_v)
+        new_ssm = ssm_state * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", c, new_ssm)
+        y = y + layer["d_skip"][None, :, None] * x
+        y = y.reshape(bsz, 1, d_inner).astype(h.dtype)
+        y = common.rmsnorm(layer["gate_norm"], y * jax.nn.silu(z))
+        return h + y @ layer["out_proj"], (new_ssm, new_conv)
+
+    h, (ssm, conv) = jax.lax.scan(
+        body, h, (params["layers"], cache.ssm, cache.conv)
+    )
+    h = common.rmsnorm(params["final_norm"], h)
+    logits = h @ params["embed"]["table"].T
+    return logits, Mamba2Cache(ssm=ssm, conv=conv)

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed into a low-rank latent ``c_kv`` [B, S, kv_lora] plus a
+shared RoPE key ``k_pe`` [B, S, rope_dim].  Training materializes per-head
+k/v from the latent (matmul-heavy — good for the MXU); decoding uses the
+*absorbed* form, attending directly in latent space so the cache stays
+[S, kv_lora + rope_dim] — the whole point of MLA.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models import hints
+
+Array = jnp.ndarray
+Params = dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+class MLACache(NamedTuple):
+    c_kv: Array   # [B, S, kv_lora]
+    k_pe: Array   # [B, S, rope_dim]
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "w_dkv": common.dense_init(ks[0], (d, cfg.kv_lora_rank), dtype),
+        "kv_norm": common.init_rmsnorm(cfg.kv_lora_rank, dtype),
+        "w_kpe": common.dense_init(ks[1], (d, rope), dtype),
+        "w_uk": common.dense_init(ks[2], (cfg.kv_lora_rank, h * nope), dtype),
+        "w_uv": common.dense_init(ks[3], (cfg.kv_lora_rank, h * vdim), dtype),
+        "wo": common.dense_init(ks[4], (h * vdim, d), dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = common.dense_init(ks[5], (d, cfg.q_lora_rank), dtype)
+        p["q_norm"] = common.init_rmsnorm(cfg.q_lora_rank, dtype)
+        p["w_uq"] = common.dense_init(
+            ks[6], (cfg.q_lora_rank, h * (nope + rope)), dtype
+        )
+    else:
+        p["w_q"] = common.dense_init(ks[5], (d, h * (nope + rope)), dtype)
+    return p
+
+
+def _queries(p: Params, cfg: ArchConfig, x: Array, positions: Array):
+    b, s, _ = x.shape
+    h, nope, rope = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        q = common.rmsnorm(p["q_norm"], x @ p["w_dq"]) @ p["w_uq"]
+    else:
+        q = x @ p["w_q"]
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = common.apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _latents(p: Params, cfg: ArchConfig, x: Array, positions: Array):
+    c_kv = common.rmsnorm(p["kv_norm"], x @ p["w_dkv"])        # [B,S,r]
+    k_pe = x @ p["w_kpe"]                                      # [B,S,rope]
+    k_pe = common.apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_block(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    chunked: bool = False,
+    cache: MLACache | None = None,
+    cache_pos: Array | None = None,
+    write_slot: Array | None = None,
+):
+    """Training/prefill (cache=None) or one-step decode (cache given)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = (nope + rope) ** -0.5
+
+    if cache is None:
+        positions = jnp.arange(s)
+        q_nope, q_pe = _queries(p, cfg, x, positions)
+        c_kv, k_pe = _latents(p, cfg, x, positions)
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, nope)
+        v = (c_kv @ p["w_uv"]).reshape(b, s, h, vdim)
+        q_nope = hints.hint(q_nope, {0: ("pod", "data"), 2: "model"})
+        k_nope = hints.hint(k_nope, {0: ("pod", "data"), 2: "model"})
+        v = hints.hint(v, {0: ("pod", "data"), 2: "model"})
+
+        if chunked:
+            # Long prefill: reuse the flash-style block scan.  Fold the shared
+            # RoPE key into a per-head key (concat) so the generic kernel
+            # applies; scaling is handled by attend_*'s 1/sqrt(head_dim) with
+            # head_dim = nope + rope, which matches MLA's scale.
+            from repro.models import attention as attn_mod
+
+            q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, rope))],
+                axis=-1,
+            )
+            out = attn_mod.attend_auto(q_full, k_full, v, causal=True)
+        else:
+            scores = (
+                jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+                + jnp.einsum("bqhd,bkd->bhqk", q_pe, k_pe)
+            ).astype(jnp.float32) * scale
+            causal = jnp.tril(jnp.ones((s, s), bool))
+            scores = jnp.where(causal[None, None], scores, _NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return out.reshape(b, s, h * vdim) @ p["wo"], (c_kv, k_pe)
+
+    # ---- absorbed decode: attend in latent space ----
+    assert cache_pos is not None and s == 1
+    slot = write_slot if write_slot is not None else cache_pos
+    positions = jnp.full((1,), cache_pos, jnp.int32)
+    q_nope, q_pe = _queries(p, cfg, x, positions)             # [B,1,h,*]
+    c_new, kpe_new = _latents(p, cfg, x, positions)           # [B,1,r], [B,1,rope]
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, slot, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache.k_pe, kpe_new, (0, slot, 0))
+
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, nope)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)[:, 0]  # [B,h,r]
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, c_kv)
+        + jnp.einsum("bhd,bsd->bhs", q_pe[:, 0], k_pe)
+    ).astype(jnp.float32) * scale
+    k_idx = jnp.arange(c_kv.shape[1])
+    scores = jnp.where((k_idx <= cache_pos)[None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, c_kv)             # [B,h,r]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, vdim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * vdim)
+    return out @ p["wo"], MLACache(c_kv=c_kv, k_pe=k_pe)

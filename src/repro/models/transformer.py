@@ -1,0 +1,168 @@
+"""Dense decoder-only transformer (llama-lineage) with scan-over-layers.
+
+Covers the assigned dense architectures (mistral-nemo-12b, granite-20b,
+qwen3-1.7b, qwen2-1.5b) and, with a patch-embedding prefix, the InternVL2 VLM
+decoder (models/vlm.py).
+
+Layer parameters are stacked along a leading [L] axis and the stack is
+traversed with ``lax.scan`` + ``jax.checkpoint`` — this keeps the HLO compact
+(one layer body regardless of depth), makes remat policy explicit, and is
+what lets 40-60-layer configs compile quickly in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import common
+
+Array = jnp.ndarray
+Params = dict[str, Any]
+
+
+def init_layer(key, cfg: ArchConfig, dtype) -> Params:
+    k_attn, k_mlp = jax.random.split(key)
+    return {
+        "attn_norm": common.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(k_attn, cfg, dtype),
+        "mlp_norm": common.init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": common.init_mlp(k_mlp, cfg.mlp, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    params: Params = {
+        "embed": common.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": common.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), dtype
+        )
+    return params
+
+
+def _layer_fwd(cfg: ArchConfig, window, chunked):
+    def body(h: Array, layer: Params) -> Array:
+        a, _ = attn_mod.attention_block(
+            layer["attn"],
+            cfg,
+            common.apply_norm(cfg.norm, layer["attn_norm"], h),
+            window=window,
+            chunked=chunked,
+        )
+        h = h + a
+        m = common.mlp(
+            layer["mlp"], cfg.mlp, common.apply_norm(cfg.norm, layer["mlp_norm"], h)
+        )
+        return h + m
+
+    return body
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Array,
+    *,
+    prefix_embeds: Array | None = None,
+    chunked_attn: bool = False,
+    window: int | None = None,
+    remat: bool = True,
+) -> Array:
+    """Hidden states [B, S(+P), d] for training/prefill."""
+    h = common.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    win = window if window is not None else cfg.sliding_window
+
+    body = _layer_fwd(cfg, win, chunked_attn)
+    step = jax.checkpoint(lambda h, lp: (body(h, lp), None)) if remat else (
+        lambda h, lp: (body(h, lp), None)
+    )
+    h, _ = jax.lax.scan(step, h, params["layers"])
+    return common.apply_norm(cfg.norm, params["final_norm"], h)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Array,
+    *,
+    prefix_embeds: Array | None = None,
+    chunked_attn: bool = False,
+    loss_chunk: int = 1024,
+) -> Array:
+    """Next-token cross-entropy; prefix (image) positions carry no loss."""
+    h = forward(
+        params, cfg, tokens, prefix_embeds=prefix_embeds, chunked_attn=chunked_attn
+    )
+    n_prefix = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    h = h[:, n_prefix:]
+    h_in, labels = h[:, :-1], tokens[:, 1:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    w = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+    return common.chunked_softmax_xent(
+        h_in, labels, mask, w,
+        chunk=min(loss_chunk, h_in.shape[1]),
+        transpose=cfg.tie_embeddings,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype) -> attn_mod.KVCache:
+    """Stacked [L, B, S, Hkv, hd] KV cache (sliding-window archs allocate only
+    the window)."""
+    s = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return attn_mod.KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    cache: attn_mod.KVCache,
+    token: Array,       # [B, 1]
+    pos: Array,         # scalar int32 — position of this token
+) -> tuple[Array, attn_mod.KVCache]:
+    """One decoding step against a static cache; scan over layers."""
+    h = common.embed(params["embed"], token)
+    window = cfg.sliding_window
+    cache_len = cache.k.shape[2]
+    # With a ring (windowed) cache the write slot wraps around.
+    slot = pos % cache_len if window else pos
+
+    def body(h, xs):
+        layer, kc, vc = xs
+        a, new_c = attn_mod.attention_block(
+            layer["attn"],
+            cfg,
+            common.apply_norm(cfg.norm, layer["attn_norm"], h),
+            cache=attn_mod.KVCache(kc, vc),
+            cache_pos=pos,
+            write_slot=slot,
+        )
+        h = h + a
+        h = h + common.mlp(
+            layer["mlp"], cfg.mlp, common.apply_norm(cfg.norm, layer["mlp_norm"], h)
+        )
+        return h, (new_c.k, new_c.v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache.k, cache.v))
+    h = common.apply_norm(cfg.norm, params["final_norm"], h)
+    w = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+    logits = common.logits_from_hidden(
+        h, params["embed"], None if cfg.tie_embeddings else w
+    )
+    return logits, attn_mod.KVCache(k=ks, v=vs)

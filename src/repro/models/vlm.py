@@ -1,0 +1,62 @@
+"""InternVL2-style VLM (arXiv:2404.16821): stub ViT frontend + LLM decoder.
+
+Per the assignment spec the InternViT vision encoder is a STUB —
+``input_specs`` supplies precomputed patch embeddings [B, n_patches,
+d_frontend].  This module owns the MLP projector (pixel-shuffle + 2-layer MLP
+in the real model; here a 2-layer MLP, which is the trainable part) and wraps
+the InternLM2 decoder (models/transformer.py) with the projected patch tokens
+as a prefix.  Loss is computed on text positions only.
+
+Decode reuses the dense decode path: image tokens are part of the prefill;
+the KV cache covers prefix + text.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, transformer
+
+Array = jnp.ndarray
+Params = dict[str, Any]
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k_lm, k_p1, k_p2 = jax.random.split(key, 3)
+    params = transformer.init_params(k_lm, cfg, dtype)
+    params["projector"] = {
+        "norm": common.init_layernorm(cfg.d_frontend, dtype),
+        "w1": common.dense_init(k_p1, (cfg.d_frontend, cfg.d_model), dtype),
+        "b1": jnp.zeros((cfg.d_model,), dtype),
+        "w2": common.dense_init(k_p2, (cfg.d_model, cfg.d_model), dtype),
+        "b2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    return params
+
+
+def project(params: Params, patch_embeds: Array) -> Array:
+    p = params["projector"]
+    x = common.layernorm(p["norm"], patch_embeds)
+    x = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    return x @ p["w2"] + p["b2"]
+
+
+def lm_loss(
+    params: Params,
+    cfg: ArchConfig,
+    patch_embeds: Array,
+    tokens: Array,
+    *,
+    chunked_attn: bool = False,
+) -> Array:
+    prefix = project(params, patch_embeds)
+    return transformer.lm_loss(
+        params, cfg, tokens, prefix_embeds=prefix, chunked_attn=chunked_attn
+    )
+
+
+init_cache = transformer.init_cache
+decode_step = transformer.decode_step

@@ -1,0 +1,17 @@
+"""Minimal pure-JAX optimizer library (no optax in this container).
+
+API mirrors the (init, update) gradient-transformation style:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from repro.optim.base import Optimizer, apply_updates, global_norm, clip_by_global_norm  # noqa: F401
+from repro.optim.adam import adam, adamw  # noqa: F401
+from repro.optim.sgd import sgd  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+)

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (step -> lr, float32 scalar in/out)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        del step
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        t = jnp.minimum(step / decay_steps, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * ((1 - alpha) * cos + alpha), jnp.float32)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, alpha: float = 0.0):
+    cos = cosine_decay(lr, max(1, decay_steps - warmup_steps), alpha)
+
+    def fn(step):
+        warm = lr * step / jnp.maximum(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps)).astype(
+            jnp.float32
+        )
+
+    return fn

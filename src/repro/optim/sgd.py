@@ -1,0 +1,51 @@
+"""SGD with optional (Nesterov) momentum."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    momentum: any
+
+
+def sgd(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    momentum: float = 0.0,
+    nesterov: bool = False,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        if momentum == 0.0:
+            return SgdState(step=jnp.zeros((), jnp.int32), momentum=None)
+        return SgdState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+
+    def update(grads, state: SgdState, params):
+        del params
+        step = state.step + 1
+        lr_t = lr_fn(step.astype(jnp.float32))
+        if momentum == 0.0:
+            updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+            return updates, SgdState(step=step, momentum=None)
+
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+        )
+        if nesterov:
+            updates = jax.tree.map(
+                lambda m, g: -lr_t * (momentum * m + g.astype(jnp.float32)), mom, grads
+            )
+        else:
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+        return updates, SgdState(step=step, momentum=mom)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,2 @@
+"""Training substrate: checkpointing (msgpack); the loop lives in repro.launch.train."""
+from repro.train import checkpoint  # noqa: F401

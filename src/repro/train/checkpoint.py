@@ -1,0 +1,117 @@
+"""Checkpointing without orbax: msgpack-framed numpy arrays.
+
+Saves arbitrary pytrees of arrays/scalars.  Layout per checkpoint directory:
+
+    step_<N>/manifest.msgpack   — treedef (as nested lists/dicts) + tensor meta
+    step_<N>/data.bin           — raw little-endian tensor payloads, concatenated
+
+Restore is zero-copy into numpy then device_put by the caller (the launcher
+re-shards onto its mesh).  Atomic via write-to-tmp + rename.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import msgpack
+import numpy as np
+
+_TAG_ARRAY = "__array__"
+_TAG_SCALAR = "__scalar__"
+
+
+def _to_serializable(tree):
+    """Replace array leaves with manifest entries; collect payloads."""
+    payloads: list[np.ndarray] = []
+
+    def visit(leaf):
+        arr = np.asarray(leaf)
+        if arr.ndim == 0:
+            return {_TAG_SCALAR: arr.item(), "dtype": str(arr.dtype)}
+        payloads.append(np.ascontiguousarray(arr))
+        return {
+            _TAG_ARRAY: len(payloads) - 1,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+        }
+
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest_leaves = [visit(l) for l in leaves]
+    return treedef, manifest_leaves, payloads
+
+
+def save(path: str, tree, step: int | None = None) -> str:
+    """Save ``tree`` under ``path`` (optionally path/step_<N>). Returns dir."""
+    out_dir = os.path.join(path, f"step_{step}") if step is not None else path
+    tmp_dir = out_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    treedef, manifest_leaves, payloads = _to_serializable(tree)
+
+    offsets, off = [], 0
+    for p in payloads:
+        offsets.append(off)
+        off += p.nbytes
+
+    manifest = {
+        "treedef": str(treedef),  # informational; reconstruction uses template
+        "leaves": manifest_leaves,
+        "offsets": offsets,
+        "total_bytes": off,
+    }
+    with open(os.path.join(tmp_dir, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    with open(os.path.join(tmp_dir, "data.bin"), "wb") as f:
+        for p in payloads:
+            f.write(p.tobytes())
+
+    if os.path.isdir(out_dir):
+        shutil.rmtree(out_dir)
+    os.rename(tmp_dir, out_dir)
+    return out_dir
+
+
+def restore(path: str, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    blob = np.memmap(os.path.join(path, "data.bin"), dtype=np.uint8, mode="r")
+
+    leaves_meta = manifest["leaves"]
+    offsets = manifest["offsets"]
+
+    def materialize(meta):
+        if _TAG_SCALAR in meta:
+            return np.dtype(meta["dtype"]).type(meta[_TAG_SCALAR])
+        idx = meta[_TAG_ARRAY]
+        dtype = np.dtype(meta["dtype"])
+        shape = tuple(meta["shape"])
+        nbytes = dtype.itemsize * int(np.prod(shape)) if shape else dtype.itemsize
+        start = offsets[idx]
+        return (
+            np.frombuffer(bytes(blob[start : start + nbytes]), dtype=dtype)
+            .reshape(shape)
+            .copy()
+        )
+
+    _, treedef = jax.tree.flatten(template)
+    restored = [materialize(m) for m in leaves_meta]
+    if treedef.num_leaves != len(restored):
+        raise ValueError(
+            f"checkpoint has {len(restored)} leaves, template expects "
+            f"{treedef.num_leaves}"
+        )
+    return treedef.unflatten(restored)
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(d.split("_", 1)[1])
+        for d in os.listdir(path)
+        if d.startswith("step_") and d.split("_", 1)[1].isdigit()
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,50 @@
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import activations
+
+
+@pytest.mark.parametrize("name", ["linear", "logsig", "tanh"])
+def test_inverse_roundtrip(name):
+    act = activations.get(name, invertible_required=True)
+    z = jnp.linspace(-4, 4, 101)
+    y = act.fn(z)
+    np.testing.assert_allclose(act.inv(act.clip_to_range(y)), z, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", ["logsig", "tanh", "linear", "relu"])
+def test_derivative_matches_finite_difference(name):
+    act = activations.get(name)
+    z = jnp.linspace(-3, 3, 61) + 0.013  # avoid relu kink at 0
+    eps = 1e-3
+    fd = (act.fn(z + eps) - act.fn(z - eps)) / (2 * eps)
+    np.testing.assert_allclose(act.deriv(z), fd, atol=1e-3)
+
+
+def test_relu_rejected_for_rolann():
+    with pytest.raises(ValueError):
+        activations.get("relu", invertible_required=True)
+
+
+def test_unknown_activation():
+    with pytest.raises(KeyError):
+        activations.get("nope")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=-0.999, max_value=0.999))
+def test_tanh_inverse_property(y):
+    act = activations.get("tanh")
+    z = act.inv(act.clip_to_range(jnp.asarray(y)))
+    assert abs(float(act.fn(z)) - y) < 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=0.001, max_value=0.999))
+def test_logsig_inverse_property(y):
+    act = activations.get("logsig")
+    z = act.inv(act.clip_to_range(jnp.asarray(y)))
+    assert abs(float(act.fn(z)) - y) < 1e-4

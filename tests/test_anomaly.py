@@ -1,0 +1,52 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anomaly
+
+
+def test_iqr_thresholds():
+    errs = jnp.asarray(np.arange(1, 101, dtype=np.float32))
+    q1, q3 = 25.75, 75.25
+    iqr = q3 - q1
+    np.testing.assert_allclose(
+        anomaly.threshold(errs, "unusual_iqr"), q3 + 1.5 * iqr, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        anomaly.threshold(errs, "extreme_iqr"), q3 + 3.0 * iqr, rtol=1e-5
+    )
+
+
+def test_quantile_threshold():
+    errs = jnp.linspace(0, 1, 1001)
+    np.testing.assert_allclose(anomaly.threshold(errs, "q90"), 0.9, atol=1e-3)
+
+
+def test_unknown_rule():
+    with pytest.raises(ValueError):
+        anomaly.threshold(jnp.ones(10), "qx")
+
+
+def test_binary_metrics():
+    pred = jnp.asarray([1, 1, 0, 0, 1, 0])
+    truth = jnp.asarray([1, 0, 0, 1, 1, 0])
+    m = anomaly.binary_metrics(pred, truth)
+    assert (m.tp, m.fp, m.fn, m.tn) == (2, 1, 1, 2)
+    np.testing.assert_allclose(m.precision, 2 / 3)
+    np.testing.assert_allclose(m.recall, 2 / 3)
+    np.testing.assert_allclose(m.f1, 2 / 3)
+
+
+def test_perfect_and_zero():
+    ones = jnp.ones(5)
+    zeros = jnp.zeros(5)
+    assert anomaly.binary_metrics(ones, ones).f1 == 1.0
+    assert anomaly.binary_metrics(zeros, ones).f1 == 0.0
+
+
+def test_evaluate_separable():
+    train = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 500).astype(np.float32))
+    test = jnp.concatenate([train[:100], train[:100] + 50.0])
+    truth = np.concatenate([np.zeros(100), np.ones(100)])
+    met = anomaly.evaluate(train, test, truth, "extreme_iqr")
+    assert met.f1 == 1.0

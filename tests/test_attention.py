@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+
+
+def _qkv(seed=0, b=2, s=64, h=4, hkv=2, hd=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (b, s, h, hd)),
+        jax.random.normal(ks[1], (b, s, hkv, hd)),
+        jax.random.normal(ks[2], (b, s, hkv, hd)),
+    )
+
+
+def test_chunked_equals_full():
+    q, k, v = _qkv()
+    full = A.attend_full(q, k, v)
+    chunked = A.attend_chunked(q, k, v, q_block=16, kv_block=16)
+    np.testing.assert_allclose(full, chunked, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 1000])
+def test_windowed(window):
+    q, k, v = _qkv(seed=1)
+    full = A.attend_full(q, k, v, window=window)
+    chunked = A.attend_chunked(q, k, v, window=window, q_block=16, kv_block=16)
+    np.testing.assert_allclose(full, chunked, atol=1e-5)
+
+
+def test_q_offset_stripe_matches_full():
+    q, k, v = _qkv(seed=2, s=128)
+    stripe = A.attend_chunked(
+        q[:, 64:96], k, v, q_block=16, kv_block=32, q_offset=64
+    )
+    full = A.attend_full(q, k, v)[:, 64:96]
+    np.testing.assert_allclose(stripe, full, atol=1e-5)
+
+
+def test_blocksizes_autofit_non_dividing():
+    """Block sizes that don't divide the sequence are auto-fitted."""
+    q, k, v = _qkv()
+    out = A.attend_chunked(q, k, v, q_block=48, kv_block=48)
+    np.testing.assert_allclose(out, A.attend_full(q, k, v), atol=1e-5)
+    # odd sequence lengths (e.g. VLM prefix 4352 = 2^8 * 17) also work
+    q2, k2, v2 = _qkv(seed=9, s=68)
+    out2 = A.attend_chunked(q2, k2, v2, q_block=32, kv_block=32)
+    np.testing.assert_allclose(out2, A.attend_full(q2, k2, v2), atol=1e-5)
+
+
+def test_decode_matches_prefill():
+    cfg = ArchConfig(
+        name="t", family="dense", citation="", n_layers=1, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+        qk_norm=True, qkv_bias=True,
+    )
+    p = A.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 64))
+    out_pf, (kc, vc) = A.attention_block(p, cfg, x)
+    cache = A.KVCache(k=jnp.zeros((2, 32, 2, 16)), v=jnp.zeros((2, 32, 2, 16)))
+    cache = A.KVCache(k=cache.k.at[:, :31].set(kc[:, :31]),
+                      v=cache.v.at[:, :31].set(vc[:, :31]))
+    out_dec, _ = A.attention_block(
+        p, cfg, x[:, 31:32], cache=cache, cache_pos=jnp.asarray(31)
+    )
+    np.testing.assert_allclose(out_dec[:, 0], out_pf[:, 31], atol=1e-5)
+
+
+def test_ring_cache_decode_window_semantics():
+    """Decoding with a ring cache == full attention with a sliding window."""
+    cfg = ArchConfig(
+        name="t", family="dense", citation="", n_layers=1, d_model=32,
+        n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64, sliding_window=8,
+    )
+    p = A.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    s = 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, s, 32))
+    ref, _ = A.attention_block(p, cfg, x, window=8)
+    win = 8
+    cache = A.KVCache(k=jnp.zeros((1, win, 1, 16)), v=jnp.zeros((1, win, 1, 16)))
+    outs = []
+    for t in range(s):
+        o, cache = A.attention_block(
+            p, cfg, x[:, t : t + 1],
+            cache=cache, cache_pos=jnp.asarray(t),
+            write_slot=jnp.asarray(t % win),
+        )
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, ref, atol=1e-4)
+
+
+def test_gqa_repeat_consistency():
+    """GQA result equals MHA with explicitly repeated KV heads."""
+    q, k, v = _qkv(seed=3)
+    gqa = A.attend_full(q, k, v)
+    mha = A.attend_full(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2))
+    np.testing.assert_allclose(gqa, mha, atol=1e-5)

@@ -1,0 +1,42 @@
+"""DAEF head on backbone activations — the paper's technique as a library
+component attached to the assigned architectures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import daef_head, get_bundle, transformer
+
+
+def test_head_flags_feature_shift():
+    rng = np.random.default_rng(0)
+    d = 64
+    normal = rng.normal(size=(512, d)) @ rng.normal(size=(d, d)) * 0.1
+    head = daef_head.fit_head(jnp.asarray(normal, jnp.float32))
+    shifted = normal[:100] + 4.0 * rng.normal(size=(100, d))
+    flags_norm = head.flag(jnp.asarray(normal[:100], jnp.float32))
+    flags_anom = head.flag(jnp.asarray(shifted, jnp.float32))
+    assert float(flags_anom.mean()) > 0.8
+    assert float(flags_norm.mean()) < 0.35
+
+
+def test_head_on_backbone_states():
+    cfg = registry.get("qwen2-1.5b").reduced()
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    def forward(tokens):
+        return transformer.forward(params, cfg, jnp.asarray(tokens), remat=False)
+
+    rng = np.random.default_rng(1)
+    # Low-entropy "normal" traffic vs uniform-random OOD tokens.
+    norm_tokens = rng.integers(0, 32, size=(128, 24)).astype(np.int32)
+    feats = daef_head.pooled_features(forward, norm_tokens)
+    head = daef_head.fit_head(jnp.asarray(feats))
+
+    ood_tokens = rng.integers(0, cfg.vocab_size, size=(64, 24)).astype(np.int32)
+    s_norm = head.score(jnp.asarray(
+        daef_head.pooled_features(forward, rng.integers(0, 32, size=(64, 24)).astype(np.int32))
+    ))
+    s_ood = head.score(jnp.asarray(daef_head.pooled_features(forward, ood_tokens)))
+    assert float(jnp.median(s_ood)) > float(jnp.median(s_norm)) * 1.5

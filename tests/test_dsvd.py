@@ -1,0 +1,55 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dsvd
+
+
+def _x(m=12, n=300, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+
+def test_local_svd_reconstructs_gram():
+    x = _x()
+    f = dsvd.local_svd(x)
+    np.testing.assert_allclose(
+        (f.u * f.s**2) @ f.u.T, np.asarray(x) @ np.asarray(x).T,
+        rtol=1e-3, atol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("method", ["svd", "gram"])
+def test_distributed_equals_centralized(method):
+    x = _x()
+    parts = [x[:, i::4] for i in range(4)]
+    merged = dsvd.dsvd(parts, rank=5, method=method)
+    u_ref, s_ref, _ = np.linalg.svd(np.asarray(x), full_matrices=False)
+    np.testing.assert_allclose(merged.s, s_ref[:5], rtol=1e-3, atol=1e-3)
+    # Compare canonical-signed subspaces.
+    u_ref5 = np.asarray(dsvd.canonicalize_signs(jnp.asarray(u_ref[:, :5])))
+    np.testing.assert_allclose(np.abs(merged.u), np.abs(u_ref5), atol=2e-3)
+
+
+def test_gram_and_svd_paths_agree():
+    x = _x(seed=5)
+    parts = [x[:, i::3] for i in range(3)]
+    a = dsvd.dsvd(parts, rank=6, method="svd")
+    b = dsvd.dsvd(parts, rank=6, method="gram")
+    np.testing.assert_allclose(a.s, b.s, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(a.u, b.u, atol=5e-3)
+
+
+def test_incremental_merge_pair():
+    x = _x(seed=7)
+    a = dsvd.local_svd(x[:, :150])
+    b = dsvd.local_svd(x[:, 150:])
+    merged = dsvd.merge_pair(a, b)
+    _, s_ref, _ = np.linalg.svd(np.asarray(x), full_matrices=False)
+    np.testing.assert_allclose(merged.s[:12], s_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_sign_canonicalization_idempotent():
+    x = _x()
+    u = dsvd.local_svd(x).u
+    np.testing.assert_allclose(u, dsvd.canonicalize_signs(u))

@@ -1,0 +1,77 @@
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daef, federated
+
+
+def _x(m=16, n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(4, n))
+    x = np.tanh(rng.normal(size=(m, 4)) @ z) + 0.05 * rng.normal(size=(m, n))
+    x = (x - x.mean(1, keepdims=True)) / x.std(1, keepdims=True)
+    return jnp.asarray(x, jnp.float32)
+
+
+CFG = daef.DAEFConfig(layer_sizes=(16, 4, 8, 16), lam_hidden=0.1, lam_last=0.5)
+
+
+def test_layer_synchronized_equals_centralized():
+    x = _x()
+    parts = [x[:, i * 1000 : (i + 1) * 1000] for i in range(4)]
+    fed = federated.federated_fit(CFG, parts)
+    cen = daef.fit(CFG, x)
+    for a, b in zip(fed.weights, cen.weights):
+        np.testing.assert_allclose(a, b, atol=3e-2)
+    for a, b in zip(fed.biases, cen.biases):
+        np.testing.assert_allclose(a, b, atol=3e-2)
+    x_test = _x(n=300, seed=5)
+    np.testing.assert_allclose(
+        daef.predict(CFG, fed, x_test), daef.predict(CFG, cen, x_test), atol=1e-2
+    )
+
+
+def test_layer_synchronized_svd_method():
+    cfg = dataclasses.replace(CFG, method="svd")
+    x = _x(seed=1)
+    parts = [x[:, i::3] for i in range(3)]
+    fed = federated.federated_fit(cfg, parts)
+    cen = daef.fit(cfg, x)
+    for a, b in zip(fed.weights, cen.weights):
+        np.testing.assert_allclose(a, b, atol=2e-2)
+
+
+def test_broker_protocol_runs_and_is_reasonable():
+    """Paper-as-written: local fits + broker aggregation (approximate)."""
+    x = _x(seed=2)
+    parts = [x[:, i::4] for i in range(4)]
+    agg = federated.train_locally_and_aggregate(CFG, parts)
+    x_test = _x(n=500, seed=9)
+    e_agg = float(daef.reconstruction_error(CFG, agg, x_test).mean())
+    e_cen = float(
+        daef.reconstruction_error(CFG, daef.fit(CFG, x), x_test).mean()
+    )
+    assert np.isfinite(e_agg)
+    # Approximate aggregation: within a generous factor of centralized.
+    assert e_agg < 5 * e_cen + 0.5
+
+
+def test_message_size_independent_of_samples():
+    """Paper §5: exchanged state must not scale with local dataset size."""
+    small = federated.publish(daef.fit(CFG, _x(n=400, seed=3)))
+    large = federated.publish(daef.fit(CFG, _x(n=4000, seed=3)))
+    assert small.nbytes() == large.nbytes()
+    # And far smaller than the raw data it summarizes.
+    assert large.nbytes() < 0.25 * _x(n=4000, seed=3).nbytes
+
+
+def test_message_contains_no_raw_data():
+    """The update consists of U/S factors and M vectors only."""
+    upd = federated.publish(daef.fit(CFG, _x(n=800, seed=4)))
+    leaves = [upd.encoder_factors.u, upd.encoder_factors.s]
+    for k in upd.layer_knowledge:
+        leaves.extend(list(k))
+    # All leaves are small matrices whose dims derive from layer sizes, not n.
+    for leaf in leaves:
+        assert all(d <= 17 for d in leaf.shape), leaf.shape

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family runs one forward/train step on CPU, asserting output shapes
+and finite values; plus decode-vs-prefill consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import get_bundle
+
+ARCHS = sorted(registry.ARCHS)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.n_patches, cfg.d_frontend)
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (b, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_loss_and_grad(arch):
+    cfg = registry.get(arch).reduced()
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert 1.0 < float(loss) < 20.0, (arch, float(loss))
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_reduces_loss(arch):
+    from repro import optim
+    from repro.launch import steps
+
+    cfg = registry.get(arch).reduced()
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt = optim.adam(3e-3)
+    state = opt.init(params)
+    step = jax.jit(steps.make_train_step(bundle, opt, microbatches=1))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(8):
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_and_decode(arch):
+    cfg = registry.get(arch).reduced()
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, b=b, s=s)
+    logits = bundle.prefill(params, batch)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        enc_out = encdec.encode(params, cfg, batch["frames"])
+        cache = encdec.init_cache(params, cfg, enc_out, s, jnp.float32)
+    else:
+        cache = bundle.init_cache(b, s, jnp.float32)
+    lg = None
+    for t in range(s):
+        lg, cache = bundle.decode(
+            params, cache, batch["tokens"][:, t : t + 1], jnp.asarray(t)
+        )
+    assert lg.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-780m", "qwen2-moe-a2.7b"])
+def test_decode_consistent_with_forward(arch):
+    """Greedy decode logits match teacher-forced forward logits.
+
+    MoE needs ample capacity here: with realistic capacity factors the
+    teacher-forced pass drops different tokens than one-at-a-time decode
+    (inherent to capacity routing), so we disable drops for the comparison.
+    """
+    import dataclasses
+
+    cfg = registry.get(arch).reduced()
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+    b, s = 1, 12
+    batch = _batch(cfg, b=b, s=s, seed=5)
+    pf_logits = bundle.prefill(params, batch)  # last-token logits
+
+    cache = bundle.init_cache(b, s, jnp.float32)
+    lg = None
+    for t in range(s):
+        lg, cache = bundle.decode(
+            params, cache, batch["tokens"][:, t : t + 1], jnp.asarray(t)
+        )
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(pf_logits[:, 0]), atol=2e-3, rtol=1e-2
+    )
+
+
+def test_reduced_configs_within_limits():
+    for arch in ARCHS:
+        r = registry.get(arch).reduced()
+        assert r.d_model <= 512
+        assert r.n_layers <= max(2, len(r.block_pattern))
+        if r.moe:
+            assert r.n_experts <= 4

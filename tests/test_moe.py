@@ -1,0 +1,69 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import moe
+
+
+def test_capacity_formula():
+    assert moe.capacity(4096, 4, 60, 1.25) == round(4096 * 4 * 1.25 / 60)
+    assert moe.capacity(1, 6, 160, 1.25) == 1  # decode: at least one slot
+
+
+def test_route_properties():
+    b, s, e, k = 2, 64, 8, 2
+    logits = jax.random.normal(jax.random.PRNGKey(0), (b, s, e))
+    cap = moe.capacity(s, k, e, 1.25)
+    dispatch, combine, aux = moe.route(logits, k, cap)
+    assert dispatch.shape == (b, s, e, cap)
+    # Each token occupies at most top_k expert slots.
+    per_token = dispatch.sum(axis=(2, 3))
+    assert float(per_token.max()) <= k + 1e-5
+    # No expert slot is used twice.
+    per_slot = dispatch.sum(axis=1)
+    assert float(per_slot.max()) <= 1 + 1e-5
+    # Combine weights are within [0, 1] and match dispatch support.
+    assert float(combine.min()) >= 0
+    assert float(combine.max()) <= 1 + 1e-5
+    assert float(jnp.where(dispatch == 0, combine, 0.0).max()) == 0.0
+    # Aux loss near 1 for uniform-ish random routing (Switch normalization).
+    assert 0.5 < float(aux) < 3.0
+
+
+def test_capacity_drops_overflow():
+    """All tokens preferring one expert -> only `cap` survive."""
+    b, s, e = 1, 32, 4
+    logits = jnp.full((b, s, e), -10.0).at[..., 1].set(10.0)
+    cap = 5
+    dispatch, _, _ = moe.route(logits, 1, cap)
+    assert float(dispatch[..., 1, :].sum()) == cap
+    assert float(dispatch.sum()) == cap
+
+
+def test_moe_ffn_shapes_and_shared_expert():
+    cfg = registry.get("qwen2-moe-a2.7b").reduced()
+    p = moe.init_moe_ffn(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, aux = moe.moe_ffn(p, cfg, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(aux)
+    # Shared expert contributes even when routing drops everything.
+    p_blocked = dict(p)
+    p_blocked["router"] = jnp.full_like(p["router"], -1e9)
+    y2, _ = moe.moe_ffn(p_blocked, cfg, x)
+    assert float(jnp.abs(y2).sum()) > 0  # shared path alive
+
+
+def test_router_gradient_flows():
+    cfg = registry.get("qwen2-moe-a2.7b").reduced()
+    p = moe.init_moe_ffn(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe.moe_ffn(p, cfg, x)
+        return jnp.mean(y**2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+    assert float(jnp.abs(g["experts"]["w_gate"]).sum()) > 0

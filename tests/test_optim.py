@@ -1,0 +1,71 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+
+def _minimize(opt, steps=300):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2)
+        )(params)
+        updates, state = opt.update(grads, state, params)
+        return optim.apply_updates(params, updates), state, loss
+
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    return params, float(loss)
+
+
+def test_adam_converges():
+    params, loss = _minimize(optim.adam(0.05))
+    assert loss < 1e-3
+    np.testing.assert_allclose(params["w"], [1.0, -2.0, 3.0], atol=0.05)
+
+
+def test_sgd_momentum_converges():
+    _, loss = _minimize(optim.sgd(0.02, momentum=0.9), steps=500)
+    assert loss < 1e-2
+
+
+def test_adamw_decays_weights():
+    opt = optim.adamw(0.0, weight_decay=0.1)  # zero lr -> only decay term
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    grads = {"w": jnp.zeros(3)}
+    updates, _ = opt.update(grads, state, params)
+    np.testing.assert_allclose(updates["w"], 0.0, atol=1e-8)  # lr=0 gates decay
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0), "b": jnp.full(9, 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    total = optim.global_norm(clipped)
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+    np.testing.assert_allclose(norm, np.sqrt(13 * 100), rtol=1e-5)
+
+
+def test_schedules():
+    warm = optim.linear_warmup_cosine(1.0, 10, 100)
+    assert float(warm(jnp.asarray(0.0))) == 0.0
+    assert abs(float(warm(jnp.asarray(10.0))) - 1.0) < 0.02
+    assert float(warm(jnp.asarray(100.0))) < 0.1
+    const = optim.constant(0.3)
+    assert float(const(5)) == np.float32(0.3)
+
+
+def test_moments_are_f32_for_bf16_params():
+    opt = optim.adam(1e-3)
+    params = {"w": jnp.zeros(3, jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.float32
+    grads = {"w": jnp.ones(3, jnp.bfloat16)}
+    updates, state2 = opt.update(grads, state, params)
+    new = optim.apply_updates(params, updates)
+    assert new["w"].dtype == jnp.bfloat16

@@ -1,0 +1,126 @@
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import activations, rolann
+
+
+def _data(m=6, n=200, out=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    d = jnp.asarray(rng.uniform(0.05, 0.95, size=(out, n)), jnp.float32)
+    return x, d
+
+
+def test_linear_solve_matches_ridge():
+    """With linear activation ROLANN == ridge regression (closed form)."""
+    x, _ = _data()
+    rng = np.random.default_rng(1)
+    d = jnp.asarray(rng.normal(size=(3, 200)), jnp.float32)
+    lam = 0.37
+    act = activations.get("linear")
+    w, b, _ = rolann.fit(x, d, act, lam)
+
+    xa = np.concatenate([np.asarray(x), np.ones((1, 200))], axis=0)
+    ridge = np.linalg.solve(
+        xa @ xa.T + lam * np.eye(7), xa @ np.asarray(d).T
+    )
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(w), np.asarray(b)[None]], axis=0),
+        ridge, rtol=1e-3, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("act_name", ["linear", "logsig", "tanh"])
+def test_gram_equals_svd_method(act_name):
+    x, d = _data()
+    if act_name == "tanh":
+        d = d * 1.6 - 0.8
+    act = activations.get(act_name)
+    w1, b1, _ = rolann.fit(x, d, act, 0.1, method="gram")
+    w2, b2, _ = rolann.fit(x, d, act, 0.1, method="svd")
+    np.testing.assert_allclose(w1, w2, atol=5e-4)
+    np.testing.assert_allclose(b1, b2, atol=5e-4)
+
+
+@pytest.mark.parametrize("method", ["gram", "svd"])
+def test_partition_merge_equals_full_fit(method):
+    """Incremental/distributed merging reproduces the single-shot solution."""
+    x, d = _data(n=300)
+    act = activations.get("logsig")
+    w_full, b_full, _ = rolann.fit(x, d, act, 0.2, method=method)
+
+    parts = [(x[:, i * 100 : (i + 1) * 100], d[:, i * 100 : (i + 1) * 100])
+             for i in range(3)]
+    if method == "gram":
+        agg = rolann.compute_stats(*parts[0], act)
+        for px, pd in parts[1:]:
+            agg = rolann.merge_stats(agg, rolann.compute_stats(px, pd, act))
+    else:
+        agg = rolann.compute_factors(*parts[0], act)
+        for px, pd in parts[1:]:
+            agg = rolann.merge_factors(agg, rolann.compute_factors(px, pd, act))
+    w, b = rolann.solve(agg, 0.2)
+    np.testing.assert_allclose(w, w_full, atol=2e-3)
+    np.testing.assert_allclose(b, b_full, atol=2e-3)
+
+
+def test_merge_factors_list_matches_pairwise():
+    x, d = _data(n=300)
+    act = activations.get("logsig")
+    parts = [rolann.compute_factors(x[:, i::3], d[:, i::3], act) for i in range(3)]
+    merged_list = rolann.merge_factors_list(parts)
+    merged_pair = rolann.merge_factors(rolann.merge_factors(parts[0], parts[1]), parts[2])
+    w1, b1 = rolann.solve(merged_list, 0.1)
+    w2, b2 = rolann.solve(merged_pair, 0.1)
+    np.testing.assert_allclose(w1, w2, atol=2e-3)
+
+
+def test_factor_stat_roundtrip():
+    x, d = _data()
+    act = activations.get("logsig")
+    stats = rolann.compute_stats(x, d, act)
+    f = rolann.stats_to_factors(stats)
+    back = rolann.factors_to_stats(f)
+    np.testing.assert_allclose(stats.g, back.g, atol=1e-3)
+
+
+def test_predict_reduces_training_error():
+    """ROLANN fit should beat the zero predictor on its training data."""
+    x, d = _data(n=400, seed=3)
+    act = activations.get("logsig")
+    w, b, _ = rolann.fit(x, d, act, 0.01)
+    pred = rolann.predict(x, w, b, act)
+    err_fit = float(jnp.mean((pred - d) ** 2))
+    err_zero = float(jnp.mean((0.5 - d) ** 2))
+    assert err_fit < err_zero
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=10),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=2, max_value=5),
+)
+def test_merge_associativity_property(m, out, parts):
+    """Gram merging is associative/commutative: any merge order solves the same."""
+    rng = np.random.default_rng(m * 100 + out * 10 + parts)
+    n = 40 * parts
+    x = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    d = jnp.asarray(rng.uniform(0.1, 0.9, size=(out, n)), jnp.float32)
+    act = activations.get("logsig")
+    chunks = [
+        rolann.compute_stats(x[:, i * 40 : (i + 1) * 40], d[:, i * 40 : (i + 1) * 40], act)
+        for i in range(parts)
+    ]
+    fwd = chunks[0]
+    for c in chunks[1:]:
+        fwd = rolann.merge_stats(fwd, c)
+    rev = chunks[-1]
+    for c in reversed(chunks[:-1]):
+        rev = rolann.merge_stats(rev, c)
+    w1, _ = rolann.solve(fwd, 0.1)
+    w2, _ = rolann.solve(rev, 0.1)
+    np.testing.assert_allclose(w1, w2, atol=1e-3)

@@ -1,0 +1,100 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import mamba2, rglru
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    B, S, H, P, G, N = 2, 32, 4, 8, 2, 16
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    x = jax.random.normal(k1, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k2, (B, S, H)))
+    a = jnp.exp(jax.random.normal(k3, (H,)) * 0.2)
+    b = jax.random.normal(k4, (B, S, G, N))
+    c = jax.random.normal(k5, (B, S, G, N))
+    y_chunk, hf = mamba2.ssd_chunked(x, dt, a, b, c, chunk=8)
+
+    rep = H // G
+    br, cr = jnp.repeat(b, rep, 2), jnp.repeat(c, rep, 2)
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(-a[None] * dt[:, t])
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", x[:, t], br[:, t], dt[:, t]
+        )
+        ys.append(jnp.einsum("bhn,bhpn->bhp", cr[:, t], h))
+    y_naive = jnp.stack(ys, 1)
+    np.testing.assert_allclose(y_chunk, y_naive, atol=1e-4)
+    np.testing.assert_allclose(hf, h, atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    B, S, H, P, G, N = 1, 64, 2, 4, 1, 8
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = jnp.exp(jax.random.normal(ks[2], (H,)) * 0.1)
+    b = jax.random.normal(ks[3], (B, S, G, N))
+    c = jax.random.normal(ks[4], (B, S, G, N))
+    y8, _ = mamba2.ssd_chunked(x, dt, a, b, c, chunk=8)
+    y32, _ = mamba2.ssd_chunked(x, dt, a, b, c, chunk=32)
+    np.testing.assert_allclose(y8, y32, atol=1e-4)
+
+
+def test_mamba2_decode_matches_forward():
+    cfg = registry.get("mamba2-780m").reduced()
+    params = mamba2.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab_size)
+    h = mamba2.forward(params, cfg, toks, remat=False)
+    logits_ref = h @ params["embed"]["table"].T
+    cache = mamba2.init_cache(cfg, 2, 0, jnp.float32)
+    logits = None
+    for t in range(24):
+        logits, cache = mamba2.decode_step(params, cfg, cache, toks[:, t : t + 1], t)
+    np.testing.assert_allclose(logits[:, 0], logits_ref[:, -1], atol=1e-3)
+
+
+def test_rg_lru_associative_scan_matches_sequential():
+    B, S, W = 2, 48, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (B, S, W))
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, W)))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, W)))
+    lam = jax.random.normal(ks[3], (W,)) + 4
+    y, h_last = rglru.rg_lru(x, r, i, lam)
+
+    log_a = -8.0 * r * jax.nn.softplus(-lam)[None, None]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(-jnp.expm1(2 * log_a))
+    h = jnp.zeros((B, W))
+    for t in range(S):
+        h = a[:, t] * h + mult[:, t] * (i[:, t] * x[:, t])
+        np.testing.assert_allclose(y[:, t], h, atol=1e-5)
+    np.testing.assert_allclose(h_last, h, atol=1e-5)
+
+
+def test_rglru_layout():
+    cfg = registry.get("recurrentgemma-9b")
+    n_periods, tail = rglru._layout(cfg)
+    assert n_periods == 12 and tail == ("rec", "rec")
+    assert cfg.attn_layers == 12
+
+
+def test_recurrentgemma_decode_matches_forward():
+    cfg = registry.get("recurrentgemma-9b").reduced()
+    params = rglru.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab_size)
+    h = rglru.forward(params, cfg, toks, remat=False)
+    logits_ref = h @ params["embed"]["table"].T
+    cache = rglru.init_cache(cfg, 1, 16, jnp.float32)
+    logits = None
+    for t in range(16):
+        logits, cache = rglru.decode_step(
+            params, cfg, cache, toks[:, t : t + 1], jnp.asarray(t)
+        )
+    np.testing.assert_allclose(logits[:, 0], logits_ref[:, -1], atol=3e-3, rtol=1e-2)

@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system (DAEF pipeline)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import autoencoder
+from repro.core import anomaly, daef
+from repro.data import synthetic
+
+
+def test_paper_pipeline_end_to_end():
+    """Full paper protocol on a dataset replica: train on normals, threshold
+    by IQR, classify a 50/50 test set — DAEF should clearly beat chance."""
+    ds = synthetic.make_dataset("cardio")
+    x_train, x_test, y_test = ds.train_test_split(0)
+    cfg = daef.DAEFConfig(
+        layer_sizes=(21, 4, 8, 12, 16, 21), lam_hidden=0.9, lam_last=0.9
+    )
+    model = daef.fit(cfg, jnp.asarray(x_train), n_partitions=4)
+    errs = daef.reconstruction_error(cfg, model, jnp.asarray(x_test))
+    met = anomaly.evaluate(model.train_errors, errs, y_test, "q90")
+    assert met.f1 > 0.6, met
+
+
+def test_daef_vs_iterative_ae_claims():
+    """Paper claims: F1 parity and a large training-time advantage."""
+    import time
+
+    ds = synthetic.make_dataset("ionosphere")
+    x_train, x_test, y_test = ds.train_test_split(0)
+
+    cfg_d = daef.DAEFConfig(layer_sizes=(33, 8, 14, 33), lam_hidden=0.01,
+                            lam_last=0.8)
+    # Warm-up fit excludes JIT compilation from the timing (the paper
+    # compares steady-state algorithm cost; compile amortizes in deployment).
+    daef.fit(cfg_d, jnp.asarray(x_train))
+    t0 = time.perf_counter()
+    model_d = daef.fit(cfg_d, jnp.asarray(x_train))
+    jnp.asarray(model_d.train_errors).block_until_ready()
+    t_daef = time.perf_counter() - t0
+    errs_d = daef.reconstruction_error(cfg_d, model_d, jnp.asarray(x_test))
+    f1_d = anomaly.evaluate(model_d.train_errors, errs_d, y_test, "extreme_iqr").f1
+
+    cfg_a = autoencoder.AEConfig(layer_sizes=(33, 25, 20, 15, 20, 25, 33),
+                                 epochs=60, seed=0)
+    model_a, t_ae = autoencoder.fit(cfg_a, x_train)
+    errs_a = autoencoder.reconstruction_error(cfg_a, model_a, jnp.asarray(x_test))
+    f1_a = anomaly.evaluate(model_a.train_errors, errs_a, y_test, "extreme_iqr").f1
+
+    # F1 parity: DAEF within 0.15 of the iterative AE (both should be decent).
+    assert f1_d > 0.55, f1_d
+    assert f1_d > f1_a - 0.15, (f1_d, f1_a)
+    # Speed: non-iterative training should win by a wide margin.
+    assert t_daef < t_ae, (t_daef, t_ae)
+
+
+def test_incremental_stream_learning():
+    """Edge scenario: a node keeps absorbing new data blocks; its model keeps
+    working without retraining from scratch."""
+    ds = synthetic.make_dataset("pendigits", scale=0.5)
+    x_train, x_test, y_test = ds.train_test_split(0)
+    cfg = daef.DAEFConfig(layer_sizes=(16, 8, 12, 16), lam_hidden=0.005,
+                          lam_last=0.7)
+    n = x_train.shape[1]
+    model = daef.fit(cfg, jnp.asarray(x_train[:, : n // 3]))
+    for lo in (n // 3, 2 * n // 3):
+        model = daef.partial_fit(cfg, model, jnp.asarray(x_train[:, lo : lo + n // 3]))
+    errs = daef.reconstruction_error(cfg, model, jnp.asarray(x_test))
+    met = anomaly.evaluate(model.train_errors, errs, y_test, "q90")
+    # Streamed partial_fit uses the paper's approximate broker merge, so the
+    # bar is "clearly better than chance on a 28%-anomaly test set", not
+    # parity with a single fit (that parity is covered by federated_fit).
+    assert met.f1 > 0.4, met
+    assert met.accuracy > 0.65, met

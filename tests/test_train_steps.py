@@ -1,0 +1,99 @@
+"""Training-step invariants: microbatch accumulation, clipping, dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import registry
+from repro.launch import steps
+from repro.models import get_bundle
+
+
+def _setup():
+    cfg = registry.get("qwen2-1.5b").reduced()
+    bundle = get_bundle(cfg, chunked_attn=False)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size
+        )
+    }
+    return bundle, params, batch
+
+
+def test_microbatch_accumulation_matches_single_batch():
+    """mb=1 and mb=4 produce the same updated params (mean-of-grads)."""
+    bundle, params, batch = _setup()
+    opt = optim.adam(1e-3)
+    p1, _, l1 = jax.jit(steps.make_train_step(bundle, opt, microbatches=1))(
+        params, opt.init(params), batch
+    )
+    p4, _, l4 = jax.jit(steps.make_train_step(bundle, opt, microbatches=4))(
+        params, opt.init(params), batch
+    )
+    assert abs(float(l1) - float(l4)) < 1e-3
+    d = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4))
+    )
+    assert d < 5e-3, d
+
+
+def test_bf16_accumulator_close_to_f32():
+    bundle, params, batch = _setup()
+    opt = optim.adam(1e-3)
+    p32, _, _ = jax.jit(steps.make_train_step(bundle, opt, microbatches=4))(
+        params, opt.init(params), batch
+    )
+    p16, _, _ = jax.jit(
+        steps.make_train_step(
+            bundle, opt, microbatches=4, accum_dtype=jnp.bfloat16
+        )
+    )(params, opt.init(params), batch)
+    # Updates are ~lr-sized; bf16 accumulation error must stay well below.
+    d = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p16))
+    )
+    assert d < 2e-3, d
+
+
+def test_clip_norm_limits_update():
+    bundle, params, batch = _setup()
+    opt = optim.sgd(1.0)
+    step = jax.jit(steps.make_train_step(bundle, opt, clip_norm=1e-6))
+    p, _, _ = step(params, opt.init(params), batch)
+    d = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(params))
+    )
+    assert d < 1e-5, d  # updates ~ lr * clipped-grad ~ 1e-6
+
+
+def test_bf16_moments_adam_still_converges():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    opt = optim.adamw(0.05, moments_dtype=jnp.bfloat16)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2)
+        )(params)
+        updates, state = opt.update(grads, state, params)
+        return optim.apply_updates(params, updates), state, loss
+
+    for _ in range(400):
+        params, state, loss = step(params, state)
+    assert float(loss) < 1e-2
+    np.testing.assert_allclose(params["w"], target, atol=0.1)
+
+
+def test_hints_noop_without_mesh():
+    from repro.models import hints
+
+    x = jnp.ones((4, 8))
+    assert hints.hint(x, {0: "model"}) is x
+    assert hints.active_mesh() is None
