@@ -1,0 +1,121 @@
+"""Fleet throughput: vmap-batched fleet engine vs a per-model Python loop.
+
+Two sequential baselines:
+
+* ``loop`` — the status quo: ``daef.fit`` called per tenant (eager, the
+  only per-model API before the fleet engine existed);
+* ``jit_loop`` — the strongest sequential contender: the single-model core
+  jitted ONCE and reused across tenants (identical shapes, so the loop pays
+  only dispatch overhead, not retracing).
+
+The fleet path trains / scores every tenant in one jitted vmap call.
+Reported numbers: models/sec (training) and scores/sec (serving), plus the
+fleet speedup over each baseline.
+
+  PYTHONPATH=src python benchmarks/fleet_throughput.py [--tenants 64]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daef, fleet
+
+
+def _timed(f, *args, repeats: int = 3):
+    """Best-of-N wall time of f(*args) with synchronization."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = f(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def main(k: int = 64, m0: int = 16, n: int = 256, repeats: int = 3) -> dict:
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.5, lam_last=0.9)
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(k, m0, n)), jnp.float32)
+    seeds = jnp.arange(k, dtype=jnp.int32)
+
+    # ---- per-model Python loop (status-quo API: eager daef.fit) ----
+    import dataclasses
+
+    def eager_loop_fit():
+        return [
+            daef.fit(dataclasses.replace(cfg, seed=i), xs[i]) for i in range(k)
+        ]
+
+    eager_loop_fit()  # warm the trace caches of the eager primitives
+    models, t_eager = _timed(eager_loop_fit, repeats=max(1, repeats - 2))
+
+    # ---- per-model loop, jitted once and reused for every tenant ----
+    @jax.jit
+    def fit_one(x, seed):
+        keys = daef.layer_keys_from_seed(seed, len(cfg.layer_sizes))
+        return daef._fit_core(cfg, x, keys, cfg.lam_hidden, cfg.lam_last)
+
+    fit_one(xs[0], seeds[0])  # compile
+
+    def loop_fit(xs, seeds):
+        return [fit_one(xs[i], seeds[i]) for i in range(k)]
+
+    models_jit, t_loop = _timed(loop_fit, xs, seeds, repeats=repeats)
+
+    # ---- fleet path ----
+    fleet.fleet_fit(cfg, xs, seeds=seeds)  # compile
+    fl, t_fleet = _timed(
+        lambda: fleet.fleet_fit(cfg, xs, seeds=seeds), repeats=repeats
+    )
+
+    # sanity: same models up to float error
+    ref = fleet.get_model(fl, 3)
+    np.testing.assert_allclose(
+        np.asarray(ref.weights[-1]), np.asarray(models[3].weights[-1]), atol=1e-4
+    )
+
+    # ---- serving: score a padded tenant batch ----
+    score_one = jax.jit(partial(daef.reconstruction_error, cfg))
+    score_one(models[0], xs[0])  # compile
+
+    def loop_score(models, xs):
+        return [score_one(models[i], xs[i]) for i in range(k)]
+
+    _, ts_loop = _timed(loop_score, models, xs, repeats=repeats)
+    fleet.fleet_scores(cfg, fl, xs)  # compile
+    _, ts_fleet = _timed(lambda: fleet.fleet_scores(cfg, fl, xs), repeats=repeats)
+
+    result = {
+        "tenants": k,
+        "train_models_per_sec_loop": k / t_eager,
+        "train_models_per_sec_jit_loop": k / t_loop,
+        "train_models_per_sec_fleet": k / t_fleet,
+        "train_speedup_vs_loop": t_eager / t_fleet,
+        "train_speedup_vs_jit_loop": t_loop / t_fleet,
+        "score_samples_per_sec_loop": k * n / ts_loop,
+        "score_samples_per_sec_fleet": k * n / ts_fleet,
+        "score_speedup": ts_loop / ts_fleet,
+    }
+    print("metric,loop,jit_loop,fleet,speedup_vs_loop,speedup_vs_jit_loop")
+    print(f"train_models_per_sec,{k / t_eager:.1f},{k / t_loop:.1f},"
+          f"{k / t_fleet:.1f},{t_eager / t_fleet:.1f}x,{t_loop / t_fleet:.1f}x")
+    print(f"score_samples_per_sec,-,{k * n / ts_loop:.0f},"
+          f"{k * n / ts_fleet:.0f},-,{ts_loop / ts_fleet:.1f}x")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tenants", type=int, default=64)
+    ap.add_argument("--features", type=int, default=16)
+    ap.add_argument("--samples", type=int, default=256)
+    ap.add_argument("--repeats", type=int, default=3)
+    a = ap.parse_args()
+    main(k=a.tenants, m0=a.features, n=a.samples, repeats=a.repeats)

@@ -1,0 +1,76 @@
+"""Fleet anomaly detection: 64 edge devices, one vmap dispatch.
+
+    PYTHONPATH=src python examples/fleet_anomaly.py
+
+The "millions of users" shape of DAEF: many small per-tenant models instead
+of one big one.  32 sites each run 2 edge devices; every device trains a
+DAEF anomaly detector on its local share of the site's (normal-only)
+traffic.  All 64 devices train in a SINGLE jitted vmap call, then each
+site's device pair is federated-merged (``fleet_merge_pairwise`` — the
+paper's broker aggregation, batched) into 32 site models, which score the
+sites' test traffic in one more dispatch.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anomaly, daef, fleet
+from repro.data import synthetic
+
+N_SITES = 32
+DEVICES_PER_SITE = 2  # -> 64 tenant models
+
+
+def main() -> None:
+    # Each site has its own data manifold; its devices split the local
+    # training normals.  Devices of one site share a seed (the paper's
+    # shared-randomness requirement for federated merging).
+    site_splits = [
+        synthetic.make_dataset("cardio", seed=s, scale=0.25).train_test_split(fold=0)
+        for s in range(N_SITES)
+    ]
+    n_half = min(s[0].shape[1] for s in site_splits) // 2
+    device_x, seeds = [], []
+    for s, (x_train, _, _) in enumerate(site_splits):
+        device_x.append(x_train[:, :n_half])
+        device_x.append(x_train[:, n_half : 2 * n_half])
+        seeds += [s, s]
+    xs = jnp.asarray(np.stack(device_x), jnp.float32)
+    k, m0, n = xs.shape
+    print(f"{k} devices across {N_SITES} sites; {n} samples x {m0} features each")
+
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9)
+
+    t0 = time.perf_counter()
+    devices = fleet.fleet_fit(cfg, xs, seeds=jnp.asarray(seeds))
+    jax.block_until_ready(devices.model.train_errors)
+    print(f"trained {k} models in one dispatch: {time.perf_counter() - t0:.2f}s "
+          f"(incl. one-time JIT)")
+
+    t0 = time.perf_counter()
+    sites = fleet.fleet_merge_pairwise(cfg, devices)
+    jax.block_until_ready(sites.model.train_errors)
+    print(f"merged {k} -> {sites.size} site models in one dispatch: "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    # Score every site's test traffic in one padded dispatch.
+    n_test = min(s[1].shape[1] for s in site_splits)
+    xs_test = jnp.asarray(
+        np.stack([s[1][:, :n_test] for s in site_splits]), jnp.float32
+    )
+    scores = fleet.fleet_scores(cfg, sites, xs_test)
+    mus = fleet.fleet_thresholds(sites, rule="q90")
+    flags = fleet.fleet_classify(scores, mus)
+
+    f1s = [
+        anomaly.binary_metrics(flags[s], site_splits[s][2][:n_test]).f1
+        for s in range(N_SITES)
+    ]
+    print(f"per-site F1 over {N_SITES} merged site models: "
+          f"mean {np.mean(f1s):.3f}  min {np.min(f1s):.3f}  max {np.max(f1s):.3f}")
+
+
+if __name__ == "__main__":
+    main()

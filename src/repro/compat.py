@@ -1,0 +1,101 @@
+"""Version-tolerant shims over jax APIs that moved between releases.
+
+The repo targets the mesh-context API (``jax.set_mesh`` /
+``jax.sharding.get_abstract_mesh``) introduced after 0.4.x; the baked
+toolchain ships jax 0.4.37 where the equivalent state lives in
+``Mesh.__enter__`` / ``thread_resources``.  Everything that touches the
+ambient mesh goes through this module so the rest of the codebase can be
+written against one API.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when no mesh context is active.
+
+    Newer jax tracks an *abstract* mesh; on 0.4.x we fall back to the
+    physical mesh installed by ``with mesh:`` (thread resources), which is
+    what ``with_sharding_constraint`` consults there anyway.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax._src import mesh as mesh_lib
+
+    phys = mesh_lib.thread_resources.env.physical_mesh
+    if phys is None or phys.empty:
+        return None
+    return phys
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` — ``jax.set_mesh`` when available,
+    otherwise the classic ``with mesh:`` entry (jax 0.4.x)."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        ctx = setter(mesh)
+        # Some versions expose set_mesh as a plain global setter returning
+        # None rather than a context manager; fall through to `with mesh:`
+        # (which shadows, and on exit restores, whatever the setter did).
+        if hasattr(ctx, "__enter__"):
+            return ctx
+    return _enter_mesh(mesh)
+
+
+@contextlib.contextmanager
+def _enter_mesh(mesh):
+    with mesh:
+        yield mesh
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis inside shard_map — ``lax.axis_size`` on
+    newer jax, the psum-of-ones identity on 0.4.x."""
+    getter = getattr(jax.lax, "axis_size", None)
+    if getter is not None:
+        return getter(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types when the running jax
+    supports them (0.4.x has neither ``AxisType`` nor the kwarg)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names),
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=True):
+    """``jax.shard_map`` (new API: ``axis_names``/``check_vma``) with a
+    fallback to ``jax.experimental.shard_map`` (0.4.x: ``auto``/``check_rep``).
+
+    ``axis_names`` is the set of *manual* axes; on the old API every other
+    mesh axis goes into ``auto``.
+    """
+    manual = frozenset(axis_names) if axis_names else frozenset(mesh.axis_names)
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=manual, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    auto = frozenset(mesh.axis_names) - manual
+    # check_rep is the old name for check_vma, but its implementation lacks
+    # replication rules for several primitives this repo uses inside
+    # shard_map (eigh/svd raise NotImplementedError) — disable it; the check
+    # still runs wherever the new API is available.  The old eager impl also
+    # rejects non-empty ``auto``, so the mapped fn must run under jit.
+    mapped = sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False, auto=auto)
+    return jax.jit(mapped) if auto else mapped

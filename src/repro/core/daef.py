@@ -69,8 +69,17 @@ class DAEFConfig:
     def layer_keys(self) -> list[jax.Array]:
         """Deterministic per-layer keys — the shared randomness every
         federated node derives identically from the agreed seed."""
-        root = jax.random.PRNGKey(self.seed)
-        return list(jax.random.split(root, max(1, len(self.layer_sizes))))
+        return list(layer_keys_from_seed(self.seed, len(self.layer_sizes)))
+
+
+def layer_keys_from_seed(seed, n_layers: int) -> jax.Array:
+    """Stacked per-layer keys [n_layers, 2] from a (possibly traced) seed.
+
+    Kept traceable so a fleet can derive per-tenant randomness from a batched
+    seed array under ``vmap`` — identical keys to ``DAEFConfig.layer_keys``.
+    """
+    root = jax.random.PRNGKey(seed)
+    return jax.random.split(root, max(1, n_layers))
 
 
 class DAEFModel(NamedTuple):
@@ -96,11 +105,30 @@ def fit(config: DAEFConfig, x: Array, *, n_partitions: int = 1) -> DAEFModel:
     ROLANN merge paths exactly as the paper describes (the result is
     identical to n_partitions=1 up to numerics).
     """
-    m0, n = x.shape
+    m0 = x.shape[0]
     if m0 != config.layer_sizes[0]:
         raise ValueError(f"input dim {m0} != layer_sizes[0] {config.layer_sizes[0]}")
+    return _fit_core(
+        config, x, config.layer_keys(), config.lam_hidden, config.lam_last,
+        n_partitions=n_partitions,
+    )
+
+
+def _fit_core(
+    config: DAEFConfig,
+    x: Array,
+    keys,
+    lam_hidden,
+    lam_last,
+    *,
+    n_partitions: int = 1,
+) -> DAEFModel:
+    """Traceable Alg. 1 body: ``keys`` may be a stacked [L, 2] key array and
+    the regularizers traced scalars, so the whole pipeline vmaps over a
+    leading tenant axis (core/fleet.py) — everything data-dependent here is
+    shape-static."""
+    m0, n = x.shape
     f_hl, f_ll = _acts(config)
-    keys = config.layer_keys()
 
     # ---- encoder: distributed truncated SVD (lines 5-12) ----
     parts = _split(x, n_partitions)
@@ -119,7 +147,7 @@ def fit(config: DAEFConfig, x: Array, *, n_partitions: int = 1) -> DAEFModel:
             keys[li],
             h,
             sizes[li],
-            config.lam_hidden,
+            lam_hidden,
             f_hl,
             init=config.init,
             aux_bias=config.aux_bias,
@@ -131,7 +159,7 @@ def fit(config: DAEFConfig, x: Array, *, n_partitions: int = 1) -> DAEFModel:
         h = res.h
 
     # ---- last layer: supervised ROLANN to reconstruct X (lines 20-25) ----
-    w_ll, b_ll, k_ll = rolann.fit(h, x, f_ll, config.lam_last, method=config.method)
+    w_ll, b_ll, k_ll = rolann.fit(h, x, f_ll, lam_last, method=config.method)
     weights.append(w_ll)
     biases.append(b_ll)
     knowledge.append(k_ll)
@@ -180,8 +208,21 @@ def merge_models(config: DAEFConfig, a: DAEFModel, b: DAEFModel, x_stats=None) -
     For the exact-centralized protocol use `federated.federated_fit`, which
     synchronizes layer-by-layer.
     """
+    return _merge_core(
+        config, a, b, config.layer_keys(), config.lam_hidden, config.lam_last
+    )
+
+
+def _merge_core(
+    config: DAEFConfig,
+    a: DAEFModel,
+    b: DAEFModel,
+    keys,
+    lam_hidden,
+    lam_last,
+) -> DAEFModel:
+    """Traceable merge body (see `_fit_core`): vmap-safe over a tenant axis."""
     f_hl, f_ll = _acts(config)
-    keys = config.layer_keys()
     sizes = config.layer_sizes
 
     enc = dsvd.merge_pair(a.encoder_factors, b.encoder_factors)
@@ -194,7 +235,7 @@ def merge_models(config: DAEFConfig, a: DAEFModel, b: DAEFModel, x_stats=None) -
     for li in range(2, len(sizes) - 1):
         k = merge(a.layer_knowledge[li - 2], b.layer_knowledge[li - 2])
         w, bias = elm_ae.layer_from_knowledge(
-            k, keys[li], sizes[li - 1], sizes[li], config.lam_hidden, f_hl,
+            k, keys[li], sizes[li - 1], sizes[li], lam_hidden, f_hl,
             init=config.init, aux_bias=config.aux_bias, dtype=w_enc.dtype,
         )
         weights.append(w)
@@ -202,7 +243,7 @@ def merge_models(config: DAEFConfig, a: DAEFModel, b: DAEFModel, x_stats=None) -
         knowledge.append(k)
 
     k_ll = merge(a.layer_knowledge[-1], b.layer_knowledge[-1])
-    w_ll, b_ll = rolann.solve(k_ll, config.lam_last)
+    w_ll, b_ll = rolann.solve(k_ll, lam_last)
     weights.append(w_ll)
     biases.append(b_ll)
     knowledge.append(k_ll)

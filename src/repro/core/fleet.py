@@ -1,0 +1,239 @@
+"""Multi-tenant DAEF fleet engine: K independent models in one dispatch.
+
+DAEF's closed-form training is cheap enough to run one model *per tenant*
+(edge node, device, user) — the per-device anomaly-detector pattern.  Doing
+that with `daef.fit` in a Python loop costs K traces and K dispatches; this
+module instead `vmap`s the traceable cores (`daef._fit_core` /
+`daef._merge_core`) over a leading tenant axis, so training, scoring and
+federated aggregation of a whole fleet are each a single jitted call.
+
+Constraints (by construction of `vmap`):
+  * all tenants share ``layer_sizes`` and the other *static* config fields
+    (activations, init scheme, method);
+  * ``lam_hidden`` / ``lam_last`` / ``seed`` may vary per tenant — they are
+    batched scalars;
+  * every tenant in one call sees the same number of samples (pad and mask
+    via ``fleet_scores``' ``n_valid`` for ragged serving batches).
+
+Data convention matches `daef`: per-tenant data is [features, samples], a
+fleet batch is [tenants, features, samples].
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import anomaly, daef
+
+Array = jnp.ndarray
+
+
+class DAEFFleet(NamedTuple):
+    """K trained DAEF models, stacked leaf-wise (leading tenant axis), plus
+    the per-tenant hyperparameters needed to merge/update them later."""
+
+    model: daef.DAEFModel   # every leaf has a leading [K] axis
+    seeds: Array            # [K] int32 — per-tenant shared-randomness seeds
+    lam_hidden: Array       # [K]
+    lam_last: Array         # [K]
+
+    @property
+    def size(self) -> int:
+        return self.seeds.shape[0]
+
+
+def _per_tenant(value, default, k: int, dtype) -> Array:
+    """Broadcast a scalar (or pass through a [K] array) of per-tenant values."""
+    arr = jnp.asarray(default if value is None else value, dtype)
+    if arr.ndim == 0:
+        arr = jnp.broadcast_to(arr, (k,))
+    if arr.shape != (k,):
+        raise ValueError(f"per-tenant value must be scalar or [K={k}], got {arr.shape}")
+    return arr
+
+
+def _tenant_keys(config: daef.DAEFConfig, seed: Array) -> Array:
+    return daef.layer_keys_from_seed(seed, len(config.layer_sizes))
+
+
+# ---------------------------------------------------------------------------
+# jitted fleet kernels (config is static and hashable -> cached per shape)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("config", "n_partitions"))
+def _fleet_fit(config, xs, seeds, lam_hidden, lam_last, *, n_partitions=1):
+    def one(x, seed, lh, ll):
+        keys = _tenant_keys(config, seed)
+        return daef._fit_core(config, x, keys, lh, ll, n_partitions=n_partitions)
+
+    return jax.vmap(one)(xs, seeds, lam_hidden, lam_last)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _fleet_predict(config, model, xs):
+    return jax.vmap(partial(daef.predict, config))(model, xs)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _fleet_scores(config, model, xs):
+    return jax.vmap(partial(daef.reconstruction_error, config))(model, xs)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _fleet_merge(config, model_a, model_b, seeds, lam_hidden, lam_last):
+    def one(a, b, seed, lh, ll):
+        keys = _tenant_keys(config, seed)
+        return daef._merge_core(config, a, b, keys, lh, ll)
+
+    return jax.vmap(one)(model_a, model_b, seeds, lam_hidden, lam_last)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def fleet_fit(
+    config: daef.DAEFConfig,
+    xs: Array,
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+    n_partitions: int = 1,
+) -> DAEFFleet:
+    """Train K independent DAEF models in one jitted vmap call.
+
+    xs: [K, m0, n] — tenant k trains on xs[k].
+    seeds / lam_hidden / lam_last: scalar (shared) or [K] (per tenant);
+    defaults come from ``config``.
+    """
+    if xs.ndim != 3:
+        raise ValueError(f"fleet data must be [K, m0, n], got {xs.shape}")
+    k = xs.shape[0]
+    if xs.shape[1] != config.layer_sizes[0]:
+        raise ValueError(
+            f"input dim {xs.shape[1]} != layer_sizes[0] {config.layer_sizes[0]}"
+        )
+    seeds = _per_tenant(seeds, config.seed, k, jnp.int32)
+    lam_hidden = _per_tenant(lam_hidden, config.lam_hidden, k, xs.dtype)
+    lam_last = _per_tenant(lam_last, config.lam_last, k, xs.dtype)
+    model = _fleet_fit(
+        config, xs, seeds, lam_hidden, lam_last, n_partitions=n_partitions
+    )
+    return DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
+                     lam_last=lam_last)
+
+
+def fleet_predict(config: daef.DAEFConfig, fleet: DAEFFleet, xs: Array) -> Array:
+    """Reconstruct xs [K, m0, n] — tenant k's model reconstructs xs[k]."""
+    return _fleet_predict(config, fleet.model, xs)
+
+
+def fleet_scores(
+    config: daef.DAEFConfig,
+    fleet: DAEFFleet,
+    xs: Array,
+    n_valid: Array | None = None,
+) -> Array:
+    """Per-sample anomaly scores [K, n] in one dispatch.
+
+    ``n_valid`` ([K] ints) masks a padded serving batch: scores of padding
+    columns (j >= n_valid[k]) come back as NaN so downstream thresholding
+    can never mistake padding for a real sample.
+    """
+    errs = _fleet_scores(config, fleet.model, xs)
+    if n_valid is None:
+        return errs
+    mask = jnp.arange(xs.shape[-1])[None, :] < jnp.asarray(n_valid)[:, None]
+    return jnp.where(mask, errs, jnp.nan)
+
+
+def fleet_merge(config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet) -> DAEFFleet:
+    """Pairwise-federated aggregation: tenant k of ``a`` merges with tenant k
+    of ``b`` (both must have been trained with the same per-tenant seed —
+    the paper's shared-randomness requirement)."""
+    if a.size != b.size:
+        raise ValueError(f"fleet sizes differ: {a.size} != {b.size}")
+    if not jnp.array_equal(a.seeds, b.seeds):
+        raise ValueError(
+            "cannot merge fleets trained with different per-tenant seeds: "
+            "decoder knowledge is only mergeable under shared stage-1 "
+            "randomness (retrain one side with matching seeds)"
+        )
+    if not (jnp.allclose(a.lam_hidden, b.lam_hidden)
+            and jnp.allclose(a.lam_last, b.lam_last)):
+        raise ValueError("cannot merge fleets with different per-tenant lambdas")
+    return DAEFFleet(
+        model=_fleet_merge(config, a.model, b.model, a.seeds, a.lam_hidden,
+                           a.lam_last),
+        seeds=a.seeds,
+        lam_hidden=a.lam_hidden,
+        lam_last=a.lam_last,
+    )
+
+
+def fleet_partial_fit(
+    config: daef.DAEFConfig, fleet: DAEFFleet, xs_new: Array
+) -> DAEFFleet:
+    """Incremental learning for every tenant at once: fit the new blocks
+    (same seeds, so the stage-1 randomness lines up) and merge."""
+    update = fleet_fit(
+        config, xs_new, seeds=fleet.seeds, lam_hidden=fleet.lam_hidden,
+        lam_last=fleet.lam_last,
+    )
+    return fleet_merge(config, fleet, update)
+
+
+def fleet_merge_pairwise(config: daef.DAEFConfig, fleet: DAEFFleet) -> DAEFFleet:
+    """Tree-reduction step: merge tenants (0,1), (2,3), ... into a fleet of
+    K//2 models.  Adjacent tenants must share a seed (they are federated
+    nodes of the same logical model)."""
+    if fleet.size % 2:
+        raise ValueError(f"need an even fleet size, got {fleet.size}")
+    even = jax.tree.map(lambda leaf: leaf[0::2], fleet)
+    odd = jax.tree.map(lambda leaf: leaf[1::2], fleet)
+    return fleet_merge(config, even, odd)
+
+
+def fleet_thresholds(fleet: DAEFFleet, rule: str = "extreme_iqr") -> Array:
+    """Per-tenant anomaly thresholds [K] from each model's train errors."""
+    return jax.vmap(lambda e: anomaly.threshold(e, rule))(fleet.model.train_errors)
+
+
+def fleet_classify(scores: Array, mus: Array) -> Array:
+    """Flag anomalies per tenant: scores [K, n] vs thresholds [K] -> int32
+    [K, n].  NaN scores (serving-batch padding) classify as 0 (normal)."""
+    return (scores > mus[:, None]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Interop with single-model daef
+# ---------------------------------------------------------------------------
+
+def fleet_from_models(
+    config: daef.DAEFConfig,
+    models: list[daef.DAEFModel],
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+) -> DAEFFleet:
+    """Stack individually trained `daef.fit` models into a fleet."""
+    if not models:
+        raise ValueError("empty model list")
+    k = len(models)
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *models)
+    return DAEFFleet(
+        model=stacked,
+        seeds=_per_tenant(seeds, config.seed, k, jnp.int32),
+        lam_hidden=_per_tenant(lam_hidden, config.lam_hidden, k, jnp.float32),
+        lam_last=_per_tenant(lam_last, config.lam_last, k, jnp.float32),
+    )
+
+
+def get_model(fleet: DAEFFleet, i: int) -> daef.DAEFModel:
+    """Extract tenant ``i`` as a plain single-model `daef.DAEFModel`."""
+    return jax.tree.map(lambda leaf: leaf[i], fleet.model)

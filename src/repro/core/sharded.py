@@ -24,6 +24,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import activations, daef, dsvd, elm_ae, rolann
 
 Array = jnp.ndarray
@@ -36,7 +37,7 @@ def _replicated(x: Array, axes) -> Array:
     reduce is noise next to the gather itself)."""
     denom = 1.0
     for ax in axes:
-        denom = denom * lax.axis_size(ax)
+        denom = denom * compat.axis_size(ax)
     return lax.psum(x, axes) / denom
 
 
@@ -161,7 +162,7 @@ def fit_on_mesh(
     # Manual collectives over the data axes only; the model axis stays
     # "auto" so XLA shards the per-output ROLANN solves across it (the
     # paper's per-core output parallelism, TPU-native — DESIGN.md §2).
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         node,
         mesh=mesh,
         in_specs=(data_spec,),

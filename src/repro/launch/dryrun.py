@@ -21,7 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro import optim
+from repro import compat, optim
 from repro.configs import registry
 from repro.launch import roofline as roofline_mod
 from repro.launch import shardings, steps
@@ -97,7 +97,7 @@ def build(arch: str, shape_name: str, *, multi_pod: bool, microbatches: int | No
         step = steps.make_train_step(
             bundle, opt, microbatches=mb, accum_dtype=accum_dtype
         )
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(p_shard, o_shard, b_shard),
@@ -109,7 +109,7 @@ def build(arch: str, shape_name: str, *, multi_pod: bool, microbatches: int | No
 
     if shape.kind == "prefill":
         step = steps.make_prefill_step(bundle)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 step, in_shardings=(p_shard, b_shard)
             ).lower(params_shape, batch_specs)
@@ -125,7 +125,7 @@ def build(arch: str, shape_name: str, *, multi_pod: bool, microbatches: int | No
     t_shard = shardings.batch_shardings({"t": token_spec}, mesh)["t"]
     pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
     step = steps.make_decode_step(bundle)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             step,
             in_shardings=(p_shard, c_shard, t_shard, None),

@@ -28,6 +28,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import daef, sharded
 from repro.launch import roofline as roofline_mod
 from repro.launch.mesh import data_axes, make_production_mesh
@@ -56,7 +57,7 @@ def build(method: str, *, d: int, n: int, multi_pod: bool, latent: int,
     from jax.sharding import PartitionSpec as P
 
     x_sharding = NamedSharding(mesh, P(None, axes))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(fit, in_shardings=(x_sharding,)).lower(x_spec)
     return lowered, mesh, cfg
 

@@ -7,26 +7,21 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (CPU demos / tests)."""
     n = len(jax.devices())
     assert n % model_parallel == 0, (n, model_parallel)
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=_auto(2),
-    )
+    return compat.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -24,6 +24,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.models import common
 from repro.models import hints
@@ -363,8 +364,9 @@ def attend_auto(
 
     b_ok = dp_spec is not None and b % hints.axis_extent(mesh, dp) == 0
     bspec = dp_spec if b_ok else None
-    return jax.shard_map(
+    return compat.shard_map(
         stripe,
+        mesh=mesh,
         in_specs=(
             P(bspec, "model", None, None),
             P(bspec, None, None, None),

@@ -19,11 +19,13 @@ import math
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Axis = str | tuple[str, ...]
 
 
 def active_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not tuple(getattr(mesh, "axis_names", ())):
         return None
     return mesh

@@ -1,0 +1,1 @@
+"""Test-support utilities (importable with the runtime deps only)."""

@@ -1,0 +1,112 @@
+"""Property-testing shim: real hypothesis when installed, else a
+deterministic fallback.
+
+The test suite's property tests (`@given` sweeps) need `hypothesis`, which is
+a test-extra — environments that install only the runtime deps (or the
+hermetic accelerator image) must still be able to *collect and run* the
+suite.  Importing from here gives:
+
+* with hypothesis installed — the genuine `given` / `settings` /
+  `strategies`, unchanged;
+* without it — a deterministic sampler that exercises each strategy's
+  boundary values plus seeded-random draws (seeded from the test name, so
+  runs are reproducible).  Far weaker than hypothesis (no shrinking, no
+  adaptive search) but it keeps the properties exercised instead of skipped.
+
+Usage in tests:
+
+    from repro.testing.proptest import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        """A value source: boundary examples + seeded random draws."""
+
+        def __init__(self, draw, bounds):
+            self._draw = draw
+            self.bounds = list(bounds)
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                bounds=[min_value, max_value],
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                bounds=[min_value, max_value],
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            opts = list(elements)
+            return _Strategy(
+                lambda rng: opts[int(rng.integers(len(opts)))],
+                bounds=[opts[0], opts[-1]],
+            )
+
+    st = _FallbackStrategies()
+
+    def given(*arg_strats, **kw_strats):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                max_examples = getattr(
+                    wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES
+                )
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode())
+                )
+                strats = list(arg_strats) + list(kw_strats.values())
+                names = list(kw_strats)
+                # Boundary rows first, then seeded random draws.
+                rows = [
+                    [s.bounds[0] for s in strats],
+                    [s.bounds[-1] for s in strats],
+                ]
+                while len(rows) < max_examples:
+                    rows.append([s.draw(rng) for s in strats])
+                for row in rows[:max_examples]:
+                    pos = row[: len(arg_strats)]
+                    kw = dict(zip(names, row[len(arg_strats):]))
+                    fn(*pos, **kw)
+
+            # functools.wraps sets __wrapped__, which would make pytest
+            # introspect the original signature and demand fixtures for the
+            # strategy parameters — the wrapper takes no arguments.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    def settings(*, max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -17,6 +17,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.launch.mesh import make_host_mesh
 """
 
@@ -102,7 +103,7 @@ def test_sharded_train_step_runs_and_matches_single_device():
     b_shard = batch_shardings(batch, mesh)
     params_d = jax.device_put(params, p_shard)
     batch_d = jax.device_put(batch, b_shard)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p2, s2, l2 = jax.jit(step)(params_d, opt.init(params_d), batch_d)
     print("LOSS", float(l1), float(l2))
     assert abs(float(l1) - float(l2)) < 1e-3
@@ -124,7 +125,7 @@ def test_attend_auto_on_mesh_both_strategies():
     k = jax.random.normal(ks[1], (4, 256, 3, 32))
     v = jax.random.normal(ks[2], (4, 256, 3, 32))
     ref = A.attend_full(q, k, v)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = jax.jit(lambda *a: A.attend_auto(*a, q_block=64, kv_block=64))(q, k, v)
     err1 = float(jnp.abs(out - ref).max())
     # divisible heads -> hint path
@@ -132,7 +133,7 @@ def test_attend_auto_on_mesh_both_strategies():
     k2 = jax.random.normal(ks[4], (4, 256, 4, 32))
     v2 = jax.random.normal(ks[5], (4, 256, 4, 32))
     ref2 = A.attend_full(q2, k2, v2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out2 = jax.jit(lambda *a: A.attend_auto(*a, q_block=64, kv_block=64))(q2, k2, v2)
     err2 = float(jnp.abs(out2 - ref2).max())
     print("ERRS", err1, err2)

@@ -1,0 +1,137 @@
+"""Fleet engine: the vmap-batched pipeline must match the sequential
+single-model API numerically, for both knowledge representations."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import daef, fleet
+
+K, M0, N = 6, 9, 160
+CFG = daef.DAEFConfig(layer_sizes=(9, 3, 5, 9), lam_hidden=0.5, lam_last=0.9)
+
+
+def _fleet_data(k=K, m0=M0, n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(k, 3, n))
+    mix = rng.normal(size=(k, m0, 3))
+    x = np.einsum("kmr,krn->kmn", mix, np.tanh(z)) + 0.1 * rng.normal(size=(k, m0, n))
+    return jnp.asarray(x, jnp.float32)
+
+
+def _assert_models_close(a: daef.DAEFModel, b: daef.DAEFModel, atol=1e-5):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(la, lb, atol=atol)
+
+
+@pytest.mark.parametrize("method", ["gram", "svd"])
+def test_fleet_fit_matches_sequential_loop(method):
+    cfg = dataclasses.replace(CFG, method=method)
+    xs = _fleet_data()
+    fl = fleet.fleet_fit(cfg, xs, seeds=jnp.arange(K))
+    for k in range(K):
+        ref = daef.fit(dataclasses.replace(cfg, seed=k), xs[k])
+        _assert_models_close(fleet.get_model(fl, k), ref, atol=1e-4)
+
+
+def test_fleet_fit_per_tenant_lambdas():
+    xs = _fleet_data()
+    lams = jnp.linspace(0.1, 0.9, K)
+    fl = fleet.fleet_fit(CFG, xs, lam_hidden=lams, lam_last=lams)
+    for k in (0, K - 1):
+        cfg_k = dataclasses.replace(
+            CFG, lam_hidden=float(lams[k]), lam_last=float(lams[k])
+        )
+        # atol looser than the fixed-lambda tests: at lam=0.1 the solve is
+        # less regularized, amplifying batched-vs-single eigh differences.
+        _assert_models_close(fleet.get_model(fl, k), daef.fit(cfg_k, xs[k]), atol=5e-3)
+
+
+@pytest.mark.parametrize("method", ["gram", "svd"])
+def test_fleet_merge_matches_pairwise_merge_models(method):
+    cfg = dataclasses.replace(CFG, method=method)
+    xa, xb = _fleet_data(seed=1), _fleet_data(seed=2)
+    fa = fleet.fleet_fit(cfg, xa)
+    fb = fleet.fleet_fit(cfg, xb)
+    merged = fleet.fleet_merge(cfg, fa, fb)
+    for k in range(0, K, 2):
+        ref = daef.merge_models(
+            cfg, fleet.get_model(fa, k), fleet.get_model(fb, k)
+        )
+        _assert_models_close(fleet.get_model(merged, k), ref, atol=2e-4)
+
+
+def test_fleet_predict_and_scores_match_single_model():
+    xs = _fleet_data()
+    fl = fleet.fleet_fit(CFG, xs)
+    recon = fleet.fleet_predict(CFG, fl, xs)
+    errs = fleet.fleet_scores(CFG, fl, xs)
+    assert recon.shape == xs.shape and errs.shape == (K, N)
+    m2 = daef.fit(CFG, xs[2])
+    np.testing.assert_allclose(recon[2], daef.predict(CFG, m2, xs[2]), atol=1e-5)
+    np.testing.assert_allclose(
+        errs[2], daef.reconstruction_error(CFG, m2, xs[2]), atol=1e-5
+    )
+
+
+def test_fleet_scores_padding_masked_nan():
+    xs = _fleet_data()
+    fl = fleet.fleet_fit(CFG, xs)
+    n_valid = jnp.asarray([N, N // 2] + [N // 4] * (K - 2))
+    errs = fleet.fleet_scores(CFG, fl, xs, n_valid=n_valid)
+    for k in range(K):
+        nv = int(n_valid[k])
+        assert bool(jnp.isfinite(errs[k, :nv]).all())
+        assert bool(jnp.isnan(errs[k, nv:]).all())
+    # NaN padding never classifies as an anomaly
+    flags = fleet.fleet_classify(errs, fleet.fleet_thresholds(fl, rule="q90"))
+    assert int(flags[1, N // 2 :].sum()) == 0
+
+
+def test_fleet_partial_fit_matches_single_model():
+    xs, xs_new = _fleet_data(seed=3), _fleet_data(seed=4)
+    fl = fleet.fleet_fit(CFG, xs)
+    upd = fleet.fleet_partial_fit(CFG, fl, xs_new)
+    ref = daef.partial_fit(CFG, daef.fit(CFG, xs[1]), xs_new[1])
+    _assert_models_close(fleet.get_model(upd, 1), ref, atol=2e-4)
+
+
+def test_fleet_merge_pairwise_halves_fleet():
+    xs = _fleet_data(k=4)
+    seeds = jnp.asarray([7, 7, 9, 9])  # adjacent tenants share a seed
+    fl = fleet.fleet_fit(CFG, xs, seeds=seeds)
+    sites = fleet.fleet_merge_pairwise(CFG, fl)
+    assert sites.size == 2
+    ref = daef.merge_models(
+        dataclasses.replace(CFG, seed=7),
+        fleet.get_model(fl, 0),
+        fleet.get_model(fl, 1),
+    )
+    _assert_models_close(fleet.get_model(sites, 0), ref, atol=2e-4)
+
+
+def test_fleet_from_models_roundtrip():
+    xs = _fleet_data(k=3)
+    models = [daef.fit(CFG, xs[i]) for i in range(3)]
+    fl = fleet.fleet_from_models(CFG, models)
+    assert fl.size == 3
+    _assert_models_close(fleet.get_model(fl, 2), models[2], atol=0)
+
+
+def test_fleet_validates_inputs():
+    xs = _fleet_data(k=2)
+    with pytest.raises(ValueError):
+        fleet.fleet_fit(CFG, xs[0])  # missing tenant axis
+    with pytest.raises(ValueError):
+        fleet.fleet_fit(CFG, xs, seeds=jnp.arange(3))  # wrong K
+    fl = fleet.fleet_fit(CFG, xs)
+    with pytest.raises(ValueError):
+        fleet.fleet_merge_pairwise(
+            CFG, jax.tree.map(lambda leaf: leaf[:1], fl)
+        )  # odd size
+    # merging fleets trained under different stage-1 randomness is invalid
+    fl_other = fleet.fleet_fit(CFG, xs, seeds=jnp.arange(2) + 100)
+    with pytest.raises(ValueError):
+        fleet.fleet_merge(CFG, fl, fl_other)

@@ -1,11 +1,11 @@
 """Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle, with
 hypothesis sweeps over shapes/dtypes (assignment requirement)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from repro.testing.proptest import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref

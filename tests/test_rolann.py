@@ -1,8 +1,8 @@
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from repro.testing.proptest import given, settings, st
 
 from repro.core import activations, rolann
 
