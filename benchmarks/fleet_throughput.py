@@ -1,6 +1,6 @@
-"""Fleet throughput: vmap-batched fleet engine vs a per-model Python loop.
+"""Fleet throughput: loop vs vmap fleet vs mesh-sharded fleet.
 
-Two sequential baselines:
+Sequential baselines:
 
 * ``loop`` — the status quo: ``daef.fit`` called per tenant (eager, the
   only per-model API before the fleet engine existed);
@@ -8,15 +8,22 @@ Two sequential baselines:
   jitted ONCE and reused across tenants (identical shapes, so the loop pays
   only dispatch overhead, not retracing).
 
-The fleet path trains / scores every tenant in one jitted vmap call.
+The ``fleet`` path trains / scores every tenant in one jitted vmap call;
+the ``sharded`` path is the same kernel with the tenant axis sharded over
+a 'tenants' device-mesh axis (K/D tenants per device — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see it on a
+laptop), plus the on-mesh tree-reduce federation ``fleet_merge_tree``.
+
 Reported numbers: models/sec (training) and scores/sec (serving), plus the
-fleet speedup over each baseline.
+fleet speedups.  The full record is written as JSON (``--out``, default
+``BENCH_fleet.json``) so CI can archive the perf trajectory per PR.
 
   PYTHONPATH=src python benchmarks/fleet_throughput.py [--tenants 64]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from functools import partial
 
@@ -24,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import daef, fleet
+from repro.core import daef, fleet, fleet_sharded
 
 
 def _timed(f, *args, repeats: int = 3):
@@ -92,22 +99,76 @@ def main(k: int = 64, m0: int = 16, n: int = 256, repeats: int = 3) -> dict:
     fleet.fleet_scores(cfg, fl, xs)  # compile
     _, ts_fleet = _timed(lambda: fleet.fleet_scores(cfg, fl, xs), repeats=repeats)
 
+    # ---- mesh-sharded fleet: same kernels, tenant axis split over devices ----
+    n_dev = len(jax.devices())
+    d = n_dev
+    while d > 1 and k % d:
+        d //= 2
+    mesh = fleet_sharded.tenant_mesh(d)
+    xs_host = np.asarray(xs)
+
+    def sharded_fit():
+        return fleet_sharded.sharded_fleet_fit(cfg, xs_host, mesh, seeds=seeds)
+
+    sharded_fit()  # compile
+    fl_sh, t_sharded = _timed(sharded_fit, repeats=repeats)
+
+    fleet_sharded.sharded_fleet_scores(cfg, fl_sh, xs_host, mesh=mesh)  # compile
+    _, ts_sharded = _timed(
+        lambda: fleet_sharded.sharded_fleet_scores(cfg, fl_sh, xs_host, mesh=mesh),
+        repeats=repeats,
+    )
+
+    # on-mesh tree-reduce federation (all tenants share seed 0 for the bench)
+    fl_m = fleet_sharded.sharded_fleet_fit(cfg, xs_host, mesh)
+    local_k = k // d
+    group = min(8, k & -k)  # largest power of two dividing k, capped at 8
+    while group > 1 and not (
+        local_k % group == 0
+        or (group % local_k == 0 and local_k & (local_k - 1) == 0)
+    ):
+        group //= 2
+    if group > 1:
+        fleet_sharded.fleet_merge_tree(cfg, fl_m, group, mesh=mesh)  # compile
+        _, t_merge_tree = _timed(
+            lambda: fleet_sharded.fleet_merge_tree(cfg, fl_m, group, mesh=mesh),
+            repeats=repeats,
+        )
+    else:
+        # group_size=1 is a no-op by contract — a timing of it would record
+        # a bogus merge throughput in the archived JSON.
+        print(f"merge_tree: no power-of-two group tiles k={k} on {d} "
+              "device(s); skipping merge benchmark")
+        t_merge_tree = None
+
     result = {
+        "devices": n_dev,
+        "mesh_tenant_devices": d,
         "tenants": k,
         "train_models_per_sec_loop": k / t_eager,
         "train_models_per_sec_jit_loop": k / t_loop,
         "train_models_per_sec_fleet": k / t_fleet,
         "train_speedup_vs_loop": t_eager / t_fleet,
         "train_speedup_vs_jit_loop": t_loop / t_fleet,
+        "train_models_per_sec_sharded": k / t_sharded,
+        "train_speedup_sharded_vs_jit_loop": t_loop / t_sharded,
         "score_samples_per_sec_loop": k * n / ts_loop,
         "score_samples_per_sec_fleet": k * n / ts_fleet,
+        "score_samples_per_sec_sharded": k * n / ts_sharded,
         "score_speedup": ts_loop / ts_fleet,
+        "merge_tree_group_size": group if t_merge_tree else None,
+        "merge_tree_models_per_sec": k / t_merge_tree if t_merge_tree else None,
     }
-    print("metric,loop,jit_loop,fleet,speedup_vs_loop,speedup_vs_jit_loop")
+    print("metric,loop,jit_loop,fleet,sharded,speedup_vs_loop,speedup_vs_jit_loop")
     print(f"train_models_per_sec,{k / t_eager:.1f},{k / t_loop:.1f},"
-          f"{k / t_fleet:.1f},{t_eager / t_fleet:.1f}x,{t_loop / t_fleet:.1f}x")
+          f"{k / t_fleet:.1f},{k / t_sharded:.1f},"
+          f"{t_eager / t_fleet:.1f}x,{t_loop / t_fleet:.1f}x")
     print(f"score_samples_per_sec,-,{k * n / ts_loop:.0f},"
-          f"{k * n / ts_fleet:.0f},-,{ts_loop / ts_fleet:.1f}x")
+          f"{k * n / ts_fleet:.0f},{k * n / ts_sharded:.0f},-,"
+          f"{ts_loop / ts_fleet:.1f}x")
+    if t_merge_tree:
+        print(f"merge_tree[g={group}]_models_per_sec,-,-,-,"
+              f"{k / t_merge_tree:.1f},-,-")
     return result
 
 
@@ -117,5 +178,11 @@ if __name__ == "__main__":
     ap.add_argument("--features", type=int, default=16)
     ap.add_argument("--samples", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="write the result record to this JSON file")
     a = ap.parse_args()
-    main(k=a.tenants, m0=a.features, n=a.samples, repeats=a.repeats)
+    record = main(k=a.tenants, m0=a.features, n=a.samples, repeats=a.repeats)
+    if a.out:
+        with open(a.out, "w") as fh:
+            json.dump(record, fh, indent=2, sort_keys=True)
+        print(f"wrote {a.out}")

@@ -1,29 +1,38 @@
 """Fleet anomaly detection: 64 edge devices, one vmap dispatch.
 
-    PYTHONPATH=src python examples/fleet_anomaly.py
+    PYTHONPATH=src python examples/fleet_anomaly.py             # vmap fleet
+    PYTHONPATH=src python examples/fleet_anomaly.py --sharded   # + tenant mesh
 
 The "millions of users" shape of DAEF: many small per-tenant models instead
 of one big one.  32 sites each run 2 edge devices; every device trains a
 DAEF anomaly detector on its local share of the site's (normal-only)
 traffic.  All 64 devices train in a SINGLE jitted vmap call, then each
-site's device pair is federated-merged (``fleet_merge_pairwise`` — the
-paper's broker aggregation, batched) into 32 site models, which score the
-sites' test traffic in one more dispatch.
+site's device pair is federated-merged (the paper's broker aggregation,
+batched) into 32 site models, which score the sites' test traffic in one
+more dispatch.
+
+``--sharded`` runs the same pipeline with the tenant axis sharded over a
+'tenants' device-mesh axis (``core/fleet_sharded``): training and scoring
+split 64/D tenants per device, and the site aggregation runs as the on-mesh
+tree reduction ``fleet_merge_tree`` (group_size = devices per site) instead
+of host-side pairwise slicing.  On a 1-device host it degenerates to the
+vmap path — same numbers, same code path as a pod.
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import anomaly, daef, fleet
+from repro.core import anomaly, daef, fleet, fleet_sharded
 from repro.data import synthetic
 
 N_SITES = 32
 DEVICES_PER_SITE = 2  # -> 64 tenant models
 
 
-def main() -> None:
+def main(sharded: bool = False) -> None:
     # Each site has its own data manifold; its devices split the local
     # training normals.  Devices of one site share a seed (the paper's
     # shared-randomness requirement for federated merging).
@@ -43,24 +52,39 @@ def main() -> None:
 
     cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9)
 
+    mesh = None
+    if sharded:
+        d = len(jax.devices())
+        while d > 1 and (k % d or (k // d) % DEVICES_PER_SITE and DEVICES_PER_SITE % (k // d)):
+            d //= 2
+        mesh = fleet_sharded.tenant_mesh(d)
+        print(f"tenant mesh: {d} device(s), {k // d} tenants per device")
+
     t0 = time.perf_counter()
-    devices = fleet.fleet_fit(cfg, xs, seeds=jnp.asarray(seeds))
+    if mesh is not None:
+        devices = fleet_sharded.sharded_fleet_fit(cfg, xs, mesh, seeds=jnp.asarray(seeds))
+    else:
+        devices = fleet.fleet_fit(cfg, xs, seeds=jnp.asarray(seeds))
     jax.block_until_ready(devices.model.train_errors)
     print(f"trained {k} models in one dispatch: {time.perf_counter() - t0:.2f}s "
           f"(incl. one-time JIT)")
 
     t0 = time.perf_counter()
-    sites = fleet.fleet_merge_pairwise(cfg, devices)
+    if mesh is not None:
+        sites = fleet_sharded.fleet_merge_tree(cfg, devices, DEVICES_PER_SITE, mesh=mesh)
+    else:
+        sites = fleet.fleet_merge_pairwise(cfg, devices)
     jax.block_until_ready(sites.model.train_errors)
     print(f"merged {k} -> {sites.size} site models in one dispatch: "
           f"{time.perf_counter() - t0:.2f}s")
 
     # Score every site's test traffic in one padded dispatch.
     n_test = min(s[1].shape[1] for s in site_splits)
-    xs_test = jnp.asarray(
-        np.stack([s[1][:, :n_test] for s in site_splits]), jnp.float32
-    )
-    scores = fleet.fleet_scores(cfg, sites, xs_test)
+    xs_test = np.stack([s[1][:, :n_test] for s in site_splits]).astype(np.float32)
+    if mesh is not None and sites.size % mesh.shape[fleet_sharded.TENANT_AXIS] == 0:
+        scores = fleet_sharded.sharded_fleet_scores(cfg, sites, xs_test, mesh=mesh)
+    else:
+        scores = fleet.fleet_scores(cfg, sites, jnp.asarray(xs_test))
     mus = fleet.fleet_thresholds(sites, rule="q90")
     flags = fleet.fleet_classify(scores, mus)
 
@@ -73,4 +97,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the tenant axis over a 'tenants' device mesh")
+    main(sharded=ap.parse_args().sharded)

@@ -9,6 +9,9 @@ Public API:
   anomaly      — reconstruction-error thresholds + metrics
   federated    — node simulation: broker protocol + layer-synchronized fit
   sharded      — shard_map on-mesh DAEF (federated node == data shard)
+  fleet        — multi-tenant engine: K models per vmap dispatch
+  fleet_sharded— fleet with the tenant axis sharded over a device mesh,
+                 incl. the cross-device tree-reduce federation
 """
 from repro.core import (  # noqa: F401
     activations,
@@ -17,6 +20,8 @@ from repro.core import (  # noqa: F401
     dsvd,
     elm_ae,
     federated,
+    fleet,
+    fleet_sharded,
     initializers,
     rolann,
 )

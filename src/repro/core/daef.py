@@ -222,38 +222,62 @@ def _merge_core(
     lam_last,
 ) -> DAEFModel:
     """Traceable merge body (see `_fit_core`): vmap-safe over a tenant axis."""
-    f_hl, f_ll = _acts(config)
-    sizes = config.layer_sizes
+    enc, knowledge, errors = merge_knowledge(config, a, b)
+    return _model_from_knowledge(
+        config, enc, knowledge, keys, lam_hidden, lam_last, errors
+    )
 
+
+def merge_knowledge(
+    config: DAEFConfig, a: DAEFModel, b: DAEFModel
+) -> tuple[dsvd.SvdFactors, tuple, Array]:
+    """Merge only the exchanged federated state of two models: encoder
+    factors (Eq. 2), per-layer ROLANN knowledge (Eq. 8-9 / Gram sums) and the
+    train-error pool.  Weight re-solving is separate (`_model_from_knowledge`)
+    so a tree reduction pays one solve at the root, not one per merge."""
+    merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
     enc = dsvd.merge_pair(a.encoder_factors, b.encoder_factors)
+    knowledge = tuple(
+        merge(ka, kb) for ka, kb in zip(a.layer_knowledge, b.layer_knowledge)
+    )
+    errors = jnp.concatenate([a.train_errors, b.train_errors])
+    return enc, knowledge, errors
+
+
+def _model_from_knowledge(
+    config: DAEFConfig,
+    enc: dsvd.SvdFactors,
+    knowledge,
+    keys,
+    lam_hidden,
+    lam_last,
+    train_errors: Array,
+) -> DAEFModel:
+    """Re-solve every layer's weights from (merged) federated knowledge."""
+    f_hl, _ = _acts(config)
+    sizes = config.layer_sizes
     w_enc = enc.u[:, : config.latent_dim]
     weights = [w_enc]
     biases: list[Array] = []
-    knowledge: list = []
 
-    merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
     for li in range(2, len(sizes) - 1):
-        k = merge(a.layer_knowledge[li - 2], b.layer_knowledge[li - 2])
         w, bias = elm_ae.layer_from_knowledge(
-            k, keys[li], sizes[li - 1], sizes[li], lam_hidden, f_hl,
+            knowledge[li - 2], keys[li], sizes[li - 1], sizes[li], lam_hidden, f_hl,
             init=config.init, aux_bias=config.aux_bias, dtype=w_enc.dtype,
         )
         weights.append(w)
         biases.append(bias)
-        knowledge.append(k)
 
-    k_ll = merge(a.layer_knowledge[-1], b.layer_knowledge[-1])
-    w_ll, b_ll = rolann.solve(k_ll, lam_last)
+    w_ll, b_ll = rolann.solve(knowledge[-1], lam_last)
     weights.append(w_ll)
     biases.append(b_ll)
-    knowledge.append(k_ll)
 
     return DAEFModel(
         weights=tuple(weights),
         biases=tuple(biases),
         encoder_factors=enc,
         layer_knowledge=tuple(knowledge),
-        train_errors=jnp.concatenate([a.train_errors, b.train_errors]),
+        train_errors=train_errors,
     )
 
 

@@ -59,6 +59,29 @@ def _tenant_keys(config: daef.DAEFConfig, seed: Array) -> Array:
     return daef.layer_keys_from_seed(seed, len(config.layer_sizes))
 
 
+def _prepare_fit(
+    config: daef.DAEFConfig, xs, seeds, lam_hidden, lam_last
+) -> tuple[Array, Array, Array]:
+    """Shared fleet-fit argument validation + per-tenant broadcasting —
+    one definition for the vmap (fleet_fit) and mesh-sharded
+    (fleet_sharded.sharded_fleet_fit) entry points.  ``xs`` may be a host
+    ndarray; only its shape/dtype are consulted."""
+    if getattr(xs, "ndim", None) != 3:
+        raise ValueError(
+            f"fleet data must be [K, m0, n], got {getattr(xs, 'shape', None)}"
+        )
+    k = xs.shape[0]
+    if xs.shape[1] != config.layer_sizes[0]:
+        raise ValueError(
+            f"input dim {xs.shape[1]} != layer_sizes[0] {config.layer_sizes[0]}"
+        )
+    return (
+        _per_tenant(seeds, config.seed, k, jnp.int32),
+        _per_tenant(lam_hidden, config.lam_hidden, k, xs.dtype),
+        _per_tenant(lam_last, config.lam_last, k, xs.dtype),
+    )
+
+
 # ---------------------------------------------------------------------------
 # jitted fleet kernels (config is static and hashable -> cached per shape)
 # ---------------------------------------------------------------------------
@@ -110,16 +133,9 @@ def fleet_fit(
     seeds / lam_hidden / lam_last: scalar (shared) or [K] (per tenant);
     defaults come from ``config``.
     """
-    if xs.ndim != 3:
-        raise ValueError(f"fleet data must be [K, m0, n], got {xs.shape}")
-    k = xs.shape[0]
-    if xs.shape[1] != config.layer_sizes[0]:
-        raise ValueError(
-            f"input dim {xs.shape[1]} != layer_sizes[0] {config.layer_sizes[0]}"
-        )
-    seeds = _per_tenant(seeds, config.seed, k, jnp.int32)
-    lam_hidden = _per_tenant(lam_hidden, config.lam_hidden, k, xs.dtype)
-    lam_last = _per_tenant(lam_last, config.lam_last, k, xs.dtype)
+    seeds, lam_hidden, lam_last = _prepare_fit(
+        config, xs, seeds, lam_hidden, lam_last
+    )
     model = _fleet_fit(
         config, xs, seeds, lam_hidden, lam_last, n_partitions=n_partitions
     )
@@ -151,12 +167,33 @@ def fleet_scores(
     return jnp.where(mask, errs, jnp.nan)
 
 
+def _require_concrete(
+    fleets: tuple[DAEFFleet, ...],
+    op: str,
+    remedy: str = "or call fleet_merge_unchecked (no validation) inside "
+                  "traced code",
+) -> None:
+    """The seed/lambda compatibility guards below are *host-side* value
+    checks (``jnp.array_equal`` → Python bool); on a tracer that conversion
+    surfaces as an inscrutable TracerBoolConversionError deep inside jax.
+    Catch it up front and name an op-appropriate escape hatch instead."""
+    for fl in fleets:
+        if any(isinstance(leaf, jax.core.Tracer)
+               for leaf in (fl.seeds, fl.lam_hidden, fl.lam_last)):
+            raise ValueError(
+                f"{op} validates per-tenant seeds/lambdas with host-side "
+                "checks and cannot run under jit/vmap/scan. Validate before "
+                f"tracing, {remedy}."
+            )
+
+
 def fleet_merge(config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet) -> DAEFFleet:
     """Pairwise-federated aggregation: tenant k of ``a`` merges with tenant k
     of ``b`` (both must have been trained with the same per-tenant seed —
     the paper's shared-randomness requirement)."""
     if a.size != b.size:
         raise ValueError(f"fleet sizes differ: {a.size} != {b.size}")
+    _require_concrete((a, b), "fleet_merge")
     if not jnp.array_equal(a.seeds, b.seeds):
         raise ValueError(
             "cannot merge fleets trained with different per-tenant seeds: "
@@ -166,6 +203,14 @@ def fleet_merge(config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet) -> DAEFFlee
     if not (jnp.allclose(a.lam_hidden, b.lam_hidden)
             and jnp.allclose(a.lam_last, b.lam_last)):
         raise ValueError("cannot merge fleets with different per-tenant lambdas")
+    return fleet_merge_unchecked(config, a, b)
+
+
+def fleet_merge_unchecked(
+    config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet
+) -> DAEFFleet:
+    """`fleet_merge` without the host-side seed/lambda validation — the
+    traced-code entry point (the caller asserts shared stage-1 randomness)."""
     return DAEFFleet(
         model=_fleet_merge(config, a.model, b.model, a.seeds, a.lam_hidden,
                            a.lam_last),

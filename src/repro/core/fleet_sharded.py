@@ -1,0 +1,395 @@
+"""Mesh-sharded DAEF fleet: K tenant models split across D devices.
+
+The fleet engine (core/fleet.py) made a fleet ONE pytree with a leading
+tenant axis; this module shards that axis over a named mesh axis
+(``"tenants"``) with ``NamedSharding(P("tenants"))`` on every leaf, so
+fleets bigger than one device's memory — or its FLOPs budget — train,
+score and serve with K/D tenants per device.  Because every fleet kernel
+is a vmap over the tenant axis, placement is the whole story for
+``fit`` / ``scores`` / ``partial_fit``: tenants never exchange data, the
+jitted kernels compile to per-shard programs with zero collectives, and
+``partial_fit`` donates the old fleet's buffers so steady-state serving
+holds one fleet in memory, not two.
+
+The one genuinely cross-device operation is federation.
+``fleet_merge_tree`` generalizes ``fleet_merge_pairwise`` (host-side
+``leaf[0::2]`` slicing, one round) to arbitrary power-of-two group
+sizes, run entirely on the mesh as a ``shard_map`` tree reduction:
+
+* groups that live inside one shard reduce with vmapped pairwise
+  knowledge merges (log2 rounds of strided local slicing — device-side);
+* groups that span shards reduce with a ``lax.ppermute`` butterfly:
+  round r exchanges models between devices ``d`` and ``d ^ 2^r``, each
+  side merging (lower-indexed block first, so the result matches the
+  sequential left-to-right ``daef.merge_models`` reduction order);
+* weights are re-solved from the merged knowledge once, at the root —
+  not once per merge round as a naive loop over `fleet_merge` would.
+
+Works for both knowledge representations: ``method="gram"`` merges are
+sums (the butterfly is a segmented all-reduce) and ``method="svd"``
+merges are the paper's concat-SVD (Eq. 2/8), whose U-sign ambiguity is
+harmless here: encoder factors are sign-canonicalized and the ROLANN
+solve is U-sign-invariant.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import daef, dsvd, fleet, rolann
+
+Array = jnp.ndarray
+
+TENANT_AXIS = "tenants"
+
+
+# ---------------------------------------------------------------------------
+# Mesh + placement helpers
+# ---------------------------------------------------------------------------
+
+def tenant_mesh(n_devices: int | None = None) -> Mesh:
+    """A 1-D mesh over ``n_devices`` (default: all) named ``"tenants"``."""
+    avail = len(jax.devices())
+    n = avail if n_devices is None else n_devices
+    if not 1 <= n <= avail:
+        raise ValueError(f"need 1 <= n_devices <= {avail}, got {n}")
+    return compat.make_mesh((n,), (TENANT_AXIS,))
+
+
+def tenant_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis-sharded placement: P("tenants") splits dim 0, replicates
+    the rest — valid for every DAEFFleet leaf and every [K, ...] batch."""
+    return NamedSharding(mesh, P(TENANT_AXIS))
+
+
+def _check_divisible(k: int, mesh: Mesh, what: str) -> None:
+    d = mesh.shape[TENANT_AXIS]
+    if k % d:
+        raise ValueError(
+            f"{what}: tenant count {k} must divide evenly over the "
+            f"{d}-device '{TENANT_AXIS}' mesh axis (pad the fleet or "
+            f"resize the mesh)"
+        )
+
+
+def shard_fleet(fl: fleet.DAEFFleet, mesh: Mesh) -> fleet.DAEFFleet:
+    """Place every fleet leaf with NamedSharding(P("tenants")).
+
+    The transfer is sharding-directed: each device receives only its K/D
+    tenant slice, there is no replicated staging copy.
+    """
+    _check_divisible(fl.size, mesh, "shard_fleet")
+    spec = tenant_sharding(mesh)
+    return jax.tree.map(lambda leaf: jax.device_put(leaf, spec), fl)
+
+
+def shard_batch(xs, mesh: Mesh) -> Array:
+    """Place a [K, ...] tenant batch (host array ok) sharded over tenants.
+
+    This is how ragged padded serving batches go on mesh: the host-built
+    padded ndarray is handed to ``device_put`` with the target sharding, so
+    each device pulls exactly its shard — never a full-batch host copy per
+    device.
+    """
+    xs = np.asarray(xs) if not isinstance(xs, jax.Array) else xs
+    _check_divisible(xs.shape[0], mesh, "shard_batch")
+    return jax.device_put(xs, tenant_sharding(mesh))
+
+
+# ---------------------------------------------------------------------------
+# Sharded fit / scores / partial_fit — placement + the existing vmap kernels
+# ---------------------------------------------------------------------------
+
+def sharded_fleet_fit(
+    config: daef.DAEFConfig,
+    xs,
+    mesh: Mesh,
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+    n_partitions: int = 1,
+) -> fleet.DAEFFleet:
+    """`fleet.fleet_fit` with the tenant axis sharded over ``mesh``.
+
+    The vmap-batched fit kernel has no cross-tenant data flow, so XLA
+    compiles it into independent per-shard programs; the returned fleet's
+    leaves stay sharded over tenants.
+    """
+    seeds, lam_hidden, lam_last = fleet._prepare_fit(
+        config, xs, seeds, lam_hidden, lam_last
+    )
+    spec = tenant_sharding(mesh)
+    xs = shard_batch(xs, mesh)
+    seeds = jax.device_put(seeds, spec)
+    lam_hidden = jax.device_put(lam_hidden, spec)
+    lam_last = jax.device_put(lam_last, spec)
+    model = fleet._fleet_fit(
+        config, xs, seeds, lam_hidden, lam_last, n_partitions=n_partitions
+    )
+    return fleet.DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
+                           lam_last=lam_last)
+
+
+def sharded_fleet_scores(
+    config: daef.DAEFConfig,
+    fl: fleet.DAEFFleet,
+    xs,
+    n_valid=None,
+    *,
+    mesh: Mesh,
+) -> Array:
+    """Per-sample anomaly scores [K, n] with tenants sharded over ``mesh``.
+
+    ``xs`` may be a host ndarray (a freshly padded serving batch); it is
+    placed by sharding before the single scoring dispatch.  Padding columns
+    (j >= n_valid[k]) come back NaN exactly as in `fleet.fleet_scores`.
+    """
+    xs = shard_batch(xs, mesh)
+    if n_valid is not None:
+        n_valid = jax.device_put(jnp.asarray(n_valid), tenant_sharding(mesh))
+    return fleet.fleet_scores(config, fl, xs, n_valid=n_valid)
+
+
+def sharded_fleet_predict(
+    config: daef.DAEFConfig, fl: fleet.DAEFFleet, xs, *, mesh: Mesh
+) -> Array:
+    """Reconstruct a tenant batch with the tenant axis sharded over ``mesh``."""
+    return fleet.fleet_predict(config, fl, shard_batch(xs, mesh))
+
+
+@partial(jax.jit, static_argnames=("config",), donate_argnames=("model",))
+def _partial_fit_kernel(config, model, xs_new, seeds, lam_hidden, lam_last):
+    def one(m, x, seed, lh, ll):
+        keys = daef.layer_keys_from_seed(seed, len(config.layer_sizes))
+        upd = daef._fit_core(config, x, keys, lh, ll)
+        return daef._merge_core(config, m, upd, keys, lh, ll)
+
+    return jax.vmap(one)(model, xs_new, seeds, lam_hidden, lam_last)
+
+
+def sharded_fleet_partial_fit(
+    config: daef.DAEFConfig, fl: fleet.DAEFFleet, xs_new, *, mesh: Mesh
+) -> fleet.DAEFFleet:
+    """Incremental update for every tenant, sharded and DONATING.
+
+    Fit-the-block + merge runs as one jitted dispatch whose ``model``
+    argument is donated: the same-shape leaves (weights, biases, encoder
+    factors, knowledge) update in place on their shards, so steady-state
+    incremental serving does not hold two fleets in memory.  The input
+    fleet's model buffers are invalid afterwards — use the returned fleet.
+    """
+    if xs_new.shape[0] != fl.size:
+        raise ValueError(f"update batch has {xs_new.shape[0]} tenants, fleet {fl.size}")
+    with warnings.catch_warnings():
+        # train_errors grows on merge (the absorbed block's errors are
+        # appended), so that one leaf legitimately cannot reuse its donated
+        # buffer; every fixed-shape leaf does.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        model = _partial_fit_kernel(
+            config, fl.model, shard_batch(xs_new, mesh), fl.seeds,
+            fl.lam_hidden, fl.lam_last,
+        )
+    return fleet.DAEFFleet(model=model, seeds=fl.seeds,
+                           lam_hidden=fl.lam_hidden, lam_last=fl.lam_last)
+
+
+# ---------------------------------------------------------------------------
+# Cross-device tree-reduce federation
+# ---------------------------------------------------------------------------
+
+def _merge_pair_state(config: daef.DAEFConfig):
+    """Pairwise merge on the exchanged state (enc factors, knowledge, errors)
+    — `daef.merge_knowledge` lifted to the tuple the reduction threads."""
+    merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
+
+    def pair(a, b):
+        enc = dsvd.merge_pair(a[0], b[0])
+        knw = tuple(merge(ka, kb) for ka, kb in zip(a[1], b[1]))
+        errs = jnp.concatenate([a[2], b[2]])
+        return enc, knw, errs
+
+    return pair
+
+
+@functools.lru_cache(maxsize=None)
+def _merge_tree_fn(config: daef.DAEFConfig, mesh: Mesh, local_rounds: int,
+                   cross_rounds: int):
+    """Build (and cache) the jitted shard_map tree-reduction kernel."""
+    n_dev = mesh.shape[TENANT_AXIS]
+    pair = _merge_pair_state(config)
+
+    def body(model, seeds, lam_hidden, lam_last):
+        state = (model.encoder_factors, model.layer_knowledge,
+                 model.train_errors)
+
+        # Local phase: groups inside this shard reduce by strided slicing —
+        # on-device views of the local block, not host gathers of the global
+        # sharded array (what fleet_merge_pairwise would do per round).
+        for _ in range(local_rounds):
+            even = jax.tree.map(lambda leaf: leaf[0::2], state)
+            odd = jax.tree.map(lambda leaf: leaf[1::2], state)
+            state = jax.vmap(pair)(even, odd)
+            seeds = seeds[0::2]
+            lam_hidden, lam_last = lam_hidden[0::2], lam_last[0::2]
+
+        # Cross-device phase: one model per device remains; butterfly-reduce
+        # groups of 2^cross_rounds adjacent devices.  d ^ shift never leaves
+        # an aligned power-of-two block, so the same permutation serves every
+        # group at once.
+        if cross_rounds:
+            me = lax.axis_index(TENANT_AXIS)
+            for r in range(cross_rounds):
+                shift = 1 << r
+                perm = [(d, d ^ shift) for d in range(n_dev)]
+                other = jax.tree.map(
+                    lambda leaf: lax.ppermute(leaf, TENANT_AXIS, perm), state
+                )
+                lower_first = (me & shift) == 0
+                a = jax.tree.map(
+                    lambda x, y: jnp.where(lower_first, x, y), state, other
+                )
+                b = jax.tree.map(
+                    lambda x, y: jnp.where(lower_first, y, x), state, other
+                )
+                state = jax.vmap(pair)(a, b)
+
+        def solve(enc, knw, errs, seed, lh, ll):
+            keys = daef.layer_keys_from_seed(seed, len(config.layer_sizes))
+            return daef._model_from_knowledge(config, enc, knw, keys, lh, ll, errs)
+
+        merged = jax.vmap(solve)(*state, seeds, lam_hidden, lam_last)
+        return merged, seeds, lam_hidden, lam_last
+
+    spec = P(TENANT_AXIS)
+    fn = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=spec,
+        axis_names={TENANT_AXIS},
+        check_vma=False,  # butterfly output is group-replicated, specs say sharded
+    )
+    return jax.jit(fn)
+
+
+@partial(jax.jit, static_argnames=("stride",))
+def _every_nth(tree, stride: int):
+    """Device-side strided dedup of group-replicated leaves."""
+    return jax.tree.map(lambda leaf: leaf[0::stride], tree)
+
+
+def _validate_groups(fl: fleet.DAEFFleet, group_size: int) -> None:
+    fleet._require_concrete(
+        (fl,), "fleet_merge_tree",
+        remedy="and call it outside jit — it orchestrates device placement "
+               "(its shard_map kernel is jitted internally)",
+    )
+    seeds = np.asarray(fl.seeds).reshape(-1, group_size)
+    if not np.array_equal(seeds, np.broadcast_to(seeds[:, :1], seeds.shape)):
+        raise ValueError(
+            "fleet_merge_tree: every group of "
+            f"{group_size} adjacent tenants must share a seed (shared "
+            "stage-1 randomness) — got per-group seeds "
+            f"{[list(dict.fromkeys(row)) for row in seeds.tolist()][:8]}"
+        )
+    for name in ("lam_hidden", "lam_last"):
+        lam = np.asarray(getattr(fl, name)).reshape(-1, group_size)
+        if not np.allclose(lam, lam[:, :1]):
+            raise ValueError(
+                f"fleet_merge_tree: {name} must match within each merge group"
+            )
+
+
+def _mesh_for_merge(fl: fleet.DAEFFleet, group_size: int) -> Mesh:
+    """Prefer the mesh the fleet is already sharded over; otherwise the
+    largest all-devices tenant mesh compatible with (K, group_size)."""
+    sh = getattr(fl.seeds, "sharding", None)
+    if isinstance(sh, NamedSharding) and TENANT_AXIS in sh.mesh.shape:
+        return sh.mesh
+    k = fl.size
+    d = len(jax.devices())
+    while d > 1:
+        local = k // d if k % d == 0 else 0
+        if local and (local % group_size == 0 or group_size % local == 0):
+            break
+        d //= 2
+    return tenant_mesh(max(1, d))
+
+
+def fleet_merge_tree(
+    config: daef.DAEFConfig,
+    fl: fleet.DAEFFleet,
+    group_size: int,
+    *,
+    mesh: Mesh | None = None,
+) -> fleet.DAEFFleet:
+    """Tree-reduce K site models into K/group_size logical models on-mesh.
+
+    Adjacent blocks of ``group_size`` tenants (a power of two) are federated
+    nodes of one logical model: they must share a seed and lambdas, and they
+    merge in left-to-right order, so the result matches the sequential
+    ``functools.reduce(daef.merge_models, group)`` up to float error —
+    with log2(group_size) merge depth and ONE weight solve instead of
+    group_size - 1 of each.
+
+    ``mesh`` defaults to the mesh the fleet is sharded over (or the largest
+    compatible all-device tenant mesh).  Constraints: K and group_size must
+    tile the mesh — K % D == 0 and the per-shard tenant count must divide,
+    or be divisible by, group_size (automatic for powers of two).
+    """
+    k = fl.size
+    if group_size < 1 or (group_size & (group_size - 1)):
+        raise ValueError(f"group_size must be a positive power of two, got {group_size}")
+    if k % group_size:
+        raise ValueError(f"group_size {group_size} must divide fleet size {k}")
+    _validate_groups(fl, group_size)
+    if group_size == 1:
+        return fl
+
+    if mesh is None:
+        mesh = _mesh_for_merge(fl, group_size)
+    if TENANT_AXIS not in mesh.shape:
+        raise ValueError(f"mesh has no '{TENANT_AXIS}' axis: {mesh.axis_names}")
+    d = mesh.shape[TENANT_AXIS]
+    _check_divisible(k, mesh, "fleet_merge_tree")
+    local_k = k // d
+    if group_size <= local_k:
+        if local_k % group_size:
+            raise ValueError(
+                f"per-shard tenant count {local_k} not divisible by "
+                f"group_size {group_size}"
+            )
+        local_rounds, cross_rounds = group_size.bit_length() - 1, 0
+    else:
+        if group_size % local_k or local_k & (local_k - 1):
+            raise ValueError(
+                f"group_size {group_size} spans shards but per-shard tenant "
+                f"count {local_k} is not a power-of-two divisor of it"
+            )
+        local_rounds = local_k.bit_length() - 1
+        cross_rounds = (group_size // local_k).bit_length() - 1
+
+    fl = shard_fleet(fl, mesh)
+    fn = _merge_tree_fn(config, mesh, local_rounds, cross_rounds)
+    model, seeds, lam_hidden, lam_last = fn(
+        fl.model, fl.seeds, fl.lam_hidden, fl.lam_last
+    )
+    merged = fleet.DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
+                             lam_last=lam_last)
+    if cross_rounds:
+        # Butterfly results are replicated inside each device group; keep one
+        # representative per group (a compiled strided slice, still on-mesh).
+        merged = _every_nth(merged, 1 << cross_rounds)
+    return merged

@@ -54,6 +54,13 @@ def _gather_merge_svd(us: Array, axes) -> tuple[Array, Array]:
     u, s, _ = jnp.linalg.svd(gathered, full_matrices=False)
     m = us.shape[-2]
     u, s = u[..., :, :m], s[..., :m]
+    # Match the host path (dsvd.merge_factors): without a canonical sign the
+    # encoder — which uses U *directly* as weights through a non-odd
+    # activation — would be a different (sign-flipped) model on mesh than
+    # off mesh.  ROLANN solves are U-sign-invariant, so canonicalizing the
+    # per-output factors too is harmless.
+    u = (dsvd.canonicalize_signs(u) if u.ndim == 2
+         else jax.vmap(dsvd.canonicalize_signs)(u))
     return _replicated(u, tuple(axes)), _replicated(s, tuple(axes))
 
 

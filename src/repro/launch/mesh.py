@@ -24,6 +24,14 @@ def make_host_mesh(model_parallel: int = 1):
     return compat.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
+def make_tenant_mesh(n_devices: int | None = None):
+    """1-D mesh named 'tenants' for sharded DAEF fleets (core/fleet_sharded):
+    K tenant models split K/D per device.  Defaults to every device."""
+    from repro.core import fleet_sharded
+
+    return fleet_sharded.tenant_mesh(n_devices)
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The batch-sharding axes of a mesh (('pod','data') when multi-pod)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

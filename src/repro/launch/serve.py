@@ -31,24 +31,37 @@ from repro.models import get_bundle
 
 def run_fleet(args) -> None:
     """Train + serve a fleet of per-tenant anomaly detectors."""
-    from repro.core import daef, fleet
+    from repro.core import daef, fleet, fleet_sharded
 
     k, n_pad = args.fleet, args.pad
+    mesh = None
+    if args.mesh_tenants:
+        d = args.mesh_tenants
+        if k % d:
+            raise SystemExit(f"--fleet {k} must be divisible by --mesh-tenants {d}")
+        mesh = fleet_sharded.tenant_mesh(d)  # raises if > available devices
+        print(f"fleet: sharding {k} tenants over a {d}-device '"
+              f"{fleet_sharded.TENANT_AXIS}' mesh axis ({k // d} per device)")
     datasets = [
         synthetic.make_dataset("cardio", seed=t, scale=args.scale) for t in range(k)
     ]
     splits = [ds.train_test_split(fold=0) for ds in datasets]
     n_train = min(s[0].shape[1] for s in splits)
-    xs_train = jnp.asarray(
-        np.stack([s[0][:, :n_train] for s in splits]), jnp.float32
-    )
+    xs_train = np.stack([s[0][:, :n_train] for s in splits]).astype(np.float32)
     m0 = xs_train.shape[1]
 
     cfg = daef.DAEFConfig(
         layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9
     )
     t0 = time.perf_counter()
-    fl = fleet.fleet_fit(cfg, xs_train, seeds=jnp.arange(k))
+    if mesh is not None:
+        # The host-built batch is placed BY SHARDING: each device pulls only
+        # its K/D tenant slice, never a full replicated copy.
+        fl = fleet_sharded.sharded_fleet_fit(
+            cfg, xs_train, mesh, seeds=jnp.arange(k)
+        )
+    else:
+        fl = fleet.fleet_fit(cfg, jnp.asarray(xs_train), seeds=jnp.arange(k))
     jax.block_until_ready(fl.model.train_errors)
     t_fit = time.perf_counter() - t0
     mus = fleet.fleet_thresholds(fl, rule="q90")
@@ -72,8 +85,13 @@ def run_fleet(args) -> None:
             idx = rng.choice(x_test.shape[1], size=counts[t], replace=False)
             batch[t, :, : counts[t]] = x_test[:, idx]
         t0 = time.perf_counter()
-        scores = fleet.fleet_scores(cfg, fl, jnp.asarray(batch),
-                                    n_valid=jnp.asarray(counts))
+        if mesh is not None:
+            scores = fleet_sharded.sharded_fleet_scores(
+                cfg, fl, batch, n_valid=counts, mesh=mesh
+            )
+        else:
+            scores = fleet.fleet_scores(cfg, fl, jnp.asarray(batch),
+                                        n_valid=jnp.asarray(counts))
         flags = fleet.fleet_classify(scores, mus)
         jax.block_until_ready(flags)
         lat.append(time.perf_counter() - t0)
@@ -104,6 +122,9 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--fleet", type=int, default=0,
                     help="serve a DAEF fleet of this many tenants instead of an LM")
+    ap.add_argument("--mesh-tenants", type=int, default=0,
+                    help="fleet mode: shard the tenant axis over this many "
+                         "devices (NamedSharding on a 'tenants' mesh axis)")
     ap.add_argument("--pad", type=int, default=64,
                     help="fleet mode: per-tenant sample padding per dispatch")
     ap.add_argument("--rounds", type=int, default=10,
@@ -114,6 +135,10 @@ def main() -> None:
 
     if args.fleet < 0:
         ap.error(f"--fleet must be a positive tenant count, got {args.fleet}")
+    if args.mesh_tenants < 0:
+        ap.error(f"--mesh-tenants must be >= 1, got {args.mesh_tenants}")
+    if args.mesh_tenants and not args.fleet:
+        ap.error("--mesh-tenants only applies to --fleet mode")
     if args.fleet and args.rounds < 1:
         ap.error(f"--rounds must be >= 1, got {args.rounds}")
     if args.fleet:

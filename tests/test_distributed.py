@@ -5,30 +5,14 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-_PRELUDE = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
-sys.path.insert(0, {src!r})
-import jax, jax.numpy as jnp, numpy as np
-from repro import compat
-from repro.launch.mesh import make_host_mesh
-"""
+from _mesh_harness import ROOT, run_on_devices
 
 
 def _run(body: str) -> str:
-    script = _PRELUDE.format(src=os.path.join(ROOT, "src")) + textwrap.dedent(body)
-    proc = subprocess.run(
-        [sys.executable, "-c", script], capture_output=True, text=True, timeout=600
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return proc.stdout
+    return run_on_devices("from repro.launch.mesh import make_host_mesh", body)
 
 
 def test_daef_fit_on_mesh_matches_host():

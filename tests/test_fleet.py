@@ -120,6 +120,22 @@ def test_fleet_from_models_roundtrip():
     _assert_models_close(fleet.get_model(fl, 2), models[2], atol=0)
 
 
+def test_fleet_merge_under_jit_raises_clear_error():
+    """Regression: the host-side seed/lambda guards used to surface as a
+    TracerBoolConversionError from inside jnp.array_equal when fleet_merge
+    was jitted; they must fail fast with an actionable message instead."""
+    xs = _fleet_data(k=2)
+    fl = fleet.fleet_fit(CFG, xs)
+    with pytest.raises(ValueError, match="fleet_merge_unchecked"):
+        jax.jit(lambda a, b: fleet.fleet_merge(CFG, a, b))(fl, fl)
+    with pytest.raises(ValueError, match="fleet_merge_unchecked"):
+        jax.jit(lambda f: fleet.fleet_merge_pairwise(CFG, f))(fl)
+    # the documented escape hatch works under jit and matches the checked path
+    merged_jit = jax.jit(lambda a, b: fleet.fleet_merge_unchecked(CFG, a, b))(fl, fl)
+    merged = fleet.fleet_merge(CFG, fl, fl)
+    _assert_models_close(merged_jit.model, merged.model, atol=1e-5)
+
+
 def test_fleet_validates_inputs():
     xs = _fleet_data(k=2)
     with pytest.raises(ValueError):

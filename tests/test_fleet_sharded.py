@@ -1,0 +1,142 @@
+"""Mesh-sharded fleet engine on a real (forced) 8-device host mesh.
+
+tests/test_parity.py proves loop==vmap==sharded numerics on whatever devices
+the main process has; these subprocess tests pin 8 virtual devices so the
+cross-device paths — NamedSharding placement actually splitting leaves,
+sharding-directed batch transfer, and fleet_merge_tree's ppermute
+butterfly — run for real.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from _mesh_harness import ROOT, run_on_devices
+
+_COMMON = """
+import dataclasses, functools
+from repro.core import daef, fleet, fleet_sharded
+
+K, M0, N = 16, 9, 64
+rng = np.random.default_rng(0)
+z = rng.normal(size=(K, 3, N))
+mix = rng.normal(size=(K, M0, 3))
+x = np.einsum("kmr,krn->kmn", mix, np.tanh(z)) + 0.1 * rng.normal(size=(K, M0, N))
+x = (x - x.mean(axis=2, keepdims=True)) / x.std(axis=2, keepdims=True)
+xs = jnp.asarray(x, jnp.float32)
+"""
+
+
+@pytest.mark.parametrize("method", ["gram", "svd"])
+def test_sharded_fit_scores_split_across_devices(method):
+    out = run_on_devices(_COMMON, f"""
+    cfg = daef.DAEFConfig(layer_sizes=(M0, 3, 5, M0), lam_hidden=0.7,
+                          lam_last=0.9, method={method!r})
+    mesh = fleet_sharded.tenant_mesh(8)
+    seeds = jnp.arange(K)
+    fl = fleet_sharded.sharded_fleet_fit(cfg, np.asarray(xs), mesh, seeds=seeds)
+    # every leaf is genuinely split over the 8 'tenants' shards
+    for leaf in jax.tree.leaves(fl.model):
+        assert len(leaf.sharding.device_set) == 8, leaf.sharding
+    fv = fleet.fleet_fit(cfg, xs, seeds=seeds)
+    for a, b in zip(jax.tree.leaves(fl.model), jax.tree.leaves(fv.model)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    # scores: host-built padded batch placed by sharding; padding -> NaN
+    n_valid = np.full(K, N // 2)
+    sc = fleet_sharded.sharded_fleet_scores(cfg, fl, np.asarray(xs),
+                                            n_valid=n_valid, mesh=mesh)
+    sv = fleet.fleet_scores(cfg, fv, xs, n_valid=jnp.asarray(n_valid))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sv), atol=1e-5,
+                               equal_nan=True)
+    assert bool(jnp.isnan(sc[:, N // 2:]).all())
+    print("SPLIT OK")
+    """)
+    assert "SPLIT OK" in out
+
+
+@pytest.mark.parametrize("method", ["gram", "svd"])
+def test_merge_tree_butterfly_matches_sequential(method):
+    """Group sizes that span 1, 2 and 8 devices (K=16 on D=8 -> local_k=2):
+    g=2 is local, g=4 crosses 2 devices, g=16 is the full butterfly."""
+    out = run_on_devices(_COMMON, f"""
+    cfg = daef.DAEFConfig(layer_sizes=(M0, 3, 5, M0), lam_hidden=0.7,
+                          lam_last=0.9, method={method!r})
+    mesh = fleet_sharded.tenant_mesh(8)
+    for g in (2, 4, 16):
+        seeds = jnp.repeat(jnp.arange(K // g), g)
+        fl = fleet_sharded.sharded_fleet_fit(cfg, np.asarray(xs), mesh, seeds=seeds)
+        fv = fleet.fleet_fit(cfg, xs, seeds=seeds)
+        tree = fleet_sharded.fleet_merge_tree(cfg, fl, g, mesh=mesh)
+        assert tree.size == K // g, (tree.size, K, g)
+        for i in range(K // g):
+            cfg_i = dataclasses.replace(cfg, seed=i)
+            ref = functools.reduce(
+                lambda a, b: daef.merge_models(cfg_i, a, b),
+                [fleet.get_model(fv, i * g + j) for j in range(g)],
+            )
+            got = fleet.get_model(tree, i)
+            for la, lb in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=1e-4 * g, rtol=1e-3)
+        print("TREE OK", g)
+    """)
+    for g in (2, 4, 16):
+        assert f"TREE OK {g}" in out
+
+
+def test_sharded_partial_fit_donates_and_matches():
+    out = run_on_devices(_COMMON, """
+    cfg = daef.DAEFConfig(layer_sizes=(M0, 3, 5, M0), lam_hidden=0.7, lam_last=0.9)
+    mesh = fleet_sharded.tenant_mesh(8)
+    fl = fleet_sharded.sharded_fleet_fit(cfg, np.asarray(xs), mesh, seeds=7)
+    upd = fleet_sharded.sharded_fleet_partial_fit(cfg, fl, np.asarray(xs[:, :, ::2]),
+                                                  mesh=mesh)
+    ref = daef.partial_fit(dataclasses.replace(cfg, seed=7),
+                           daef.fit(dataclasses.replace(cfg, seed=7), xs[1]),
+                           xs[1, :, ::2])
+    got = fleet.get_model(upd, 1)
+    for la, lb in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=2e-4)
+    # donation is declared on the kernel (input/output aliasing in the
+    # lowering); the multi-device CPU backend silently drops it at compile
+    # time, so assert on a single-device lowering of the same kernel —
+    # accelerator backends reuse the sharded buffers in place.
+    fv = fleet.fleet_fit(cfg, xs, seeds=7)
+    lowered = fleet_sharded._partial_fit_kernel.lower(
+        cfg, fv.model, xs, fv.seeds, fv.lam_hidden, fv.lam_last)
+    assert "tf.aliasing_output" in lowered.as_text()
+    print("PARTIAL OK")
+    """)
+    assert "PARTIAL OK" in out
+
+
+def test_shard_batch_rejects_ragged_tenant_count():
+    out = run_on_devices("""
+    from repro.core import fleet_sharded
+    mesh = fleet_sharded.tenant_mesh(8)
+    try:
+        fleet_sharded.shard_batch(np.zeros((6, 4, 8), np.float32), mesh)
+        raise SystemExit("expected ValueError")
+    except ValueError as e:
+        assert "divide evenly" in str(e), e
+    print("RAGGED OK")
+    """)
+    assert "RAGGED OK" in out
+
+
+def test_serve_fleet_mesh_tenants_smoke():
+    """launch/serve.py --fleet --mesh-tenants end to end on 8 devices."""
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(ROOT, "src"),
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--fleet", "16",
+         "--mesh-tenants", "8", "--rounds", "3", "--pad", "16"],
+        capture_output=True, text=True, timeout=600, env=env, cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "sharding 16 tenants over a 8-device" in proc.stdout
+    assert "fleet serve OK" in proc.stdout
