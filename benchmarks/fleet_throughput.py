@@ -16,7 +16,8 @@ laptop), plus the on-mesh tree-reduce federation ``fleet_merge_tree``.
 
 Reported numbers: models/sec (training) and scores/sec (serving), plus the
 fleet speedups.  The full record is written as JSON (``--out``, default
-``BENCH_fleet.json``) so CI can archive the perf trajectory per PR.
+``BENCH_fleet.json`` at the *repo root* so bench runs accumulate the
+committed perf trajectory; CI archives the same file as an artifact).
 
   PYTHONPATH=src python benchmarks/fleet_throughput.py [--tenants 64]
 """
@@ -26,12 +27,15 @@ import argparse
 import json
 import time
 from functools import partial
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import daef, fleet, fleet_sharded
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _timed(f, *args, repeats: int = 3):
@@ -178,8 +182,9 @@ if __name__ == "__main__":
     ap.add_argument("--features", type=int, default=16)
     ap.add_argument("--samples", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--out", default="BENCH_fleet.json",
-                    help="write the result record to this JSON file")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_fleet.json"),
+                    help="write the result record to this JSON file "
+                         "(default: repo root, committed per PR)")
     a = ap.parse_args()
     record = main(k=a.tenants, m0=a.features, n=a.samples, repeats=a.repeats)
     if a.out:

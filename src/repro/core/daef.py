@@ -24,7 +24,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import activations, dsvd, elm_ae, rolann
+from repro.core import activations, dsvd, elm_ae, rolann, stats_backend
 
 Array = jnp.ndarray
 
@@ -47,6 +47,8 @@ class DAEFConfig:
     aux_bias: str = "zero"            # decoder bias scheme (see elm_ae)
     method: str = "gram"              # "gram" fast path | "svd" paper-faithful
     seed: int = 0                     # shared randomness across federated nodes
+    stats_backend: str | None = None  # Gram-stats producer: "einsum" | "fused"
+                                      # | None (resolve $REPRO_STATS_BACKEND)
 
     def __post_init__(self):
         if len(self.layer_sizes) < 3:
@@ -56,6 +58,20 @@ class DAEFConfig:
                 f"autoencoder must reconstruct its input: "
                 f"{self.layer_sizes[0]} != {self.layer_sizes[-1]}"
             )
+        if self.stats_backend is not None:
+            stats_backend.resolve(self.stats_backend)  # raises on unknown names
+
+    def resolved(self) -> "DAEFConfig":
+        """This config with ``stats_backend`` made concrete (env resolved).
+
+        Public entry points call this *before* handing the config to a jitted
+        kernel as a static argument, so the resolved backend — not the
+        mutable environment — keys the jit cache.
+        """
+        concrete = stats_backend.resolve(self.stats_backend)
+        if concrete == self.stats_backend:
+            return self
+        return dataclasses.replace(self, stats_backend=concrete)
 
     @property
     def latent_dim(self) -> int:
@@ -108,6 +124,7 @@ def fit(config: DAEFConfig, x: Array, *, n_partitions: int = 1) -> DAEFModel:
     m0 = x.shape[0]
     if m0 != config.layer_sizes[0]:
         raise ValueError(f"input dim {m0} != layer_sizes[0] {config.layer_sizes[0]}")
+    config = config.resolved()
     return _fit_core(
         config, x, config.layer_keys(), config.lam_hidden, config.lam_last,
         n_partitions=n_partitions,
@@ -152,6 +169,7 @@ def _fit_core(
             init=config.init,
             aux_bias=config.aux_bias,
             method=config.method,
+            backend=config.stats_backend,
         )
         weights.append(res.w)
         biases.append(res.b)
@@ -159,7 +177,9 @@ def _fit_core(
         h = res.h
 
     # ---- last layer: supervised ROLANN to reconstruct X (lines 20-25) ----
-    w_ll, b_ll, k_ll = rolann.fit(h, x, f_ll, lam_last, method=config.method)
+    w_ll, b_ll, k_ll = rolann.fit(
+        h, x, f_ll, lam_last, method=config.method, backend=config.stats_backend
+    )
     weights.append(w_ll)
     biases.append(b_ll)
     knowledge.append(k_ll)

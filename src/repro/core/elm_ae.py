@@ -57,6 +57,7 @@ def train_layer(
     init: str = "xavier",
     aux_bias: str = "zero",
     method: str = "gram",
+    backend: str | None = None,
 ) -> LayerResult:
     """Alg. 2: train the decoder layer mapping H_l [m_l, n] -> H_{l+1}."""
     m_l = h_l.shape[0]
@@ -67,7 +68,9 @@ def train_layer(
     # shape [inputs=m_next, outputs=m_l].  The decoder layer needs
     # W_{l+1} in R^{m_l x m_next} so that H_{l+1} = f(W_{l+1}^T H_l + b 1^T)
     # (Eq. 4); the ELM-AE transpose trick W_{l+1} = W_c2^T gives exactly that.
-    w_c2, _b_c2, knowledge = rolann.fit(h_c1, h_l, act, lam, method=method)
+    w_c2, _b_c2, knowledge = rolann.fit(
+        h_c1, h_l, act, lam, method=method, backend=backend
+    )
     w_next = w_c2.T  # [m_l, m_next]
     if aux_bias == "zero":
         b_next = jnp.zeros((m_next,), h_l.dtype)
@@ -89,6 +92,7 @@ def layer_knowledge_from_partition(
     init: str = "xavier",
     method: str = "gram",
     factorization: str = "direct_svd",
+    backend: str | None = None,
 ) -> rolann.RolannFactors | rolann.RolannStats:
     """Federated building block: compute ONLY the mergeable ROLANN statistics
     of this partition for the given decoder layer (stage-1 randomness is
@@ -97,9 +101,9 @@ def layer_knowledge_from_partition(
     w_c1, b_c1 = stage1(key, m_l, m_next, init, h_l.dtype)
     h_c1 = act.fn(w_c1.T @ h_l + b_c1[:, None])
     if method == "gram":
-        return rolann.compute_stats(h_c1, h_l, act)
+        return rolann.compute_stats(h_c1, h_l, act, backend=backend)
     if factorization == "gram_eigh":
-        return rolann.compute_factors_via_gram(h_c1, h_l, act)
+        return rolann.compute_factors_via_gram(h_c1, h_l, act, backend=backend)
     return rolann.compute_factors(h_c1, h_l, act)
 
 

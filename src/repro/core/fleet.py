@@ -133,6 +133,7 @@ def fleet_fit(
     seeds / lam_hidden / lam_last: scalar (shared) or [K] (per tenant);
     defaults come from ``config``.
     """
+    config = config.resolved()  # env-resolved backend keys the jit cache
     seeds, lam_hidden, lam_last = _prepare_fit(
         config, xs, seeds, lam_hidden, lam_last
     )

@@ -125,6 +125,7 @@ def sharded_fleet_fit(
     compiles it into independent per-shard programs; the returned fleet's
     leaves stay sharded over tenants.
     """
+    config = config.resolved()
     seeds, lam_hidden, lam_last = fleet._prepare_fit(
         config, xs, seeds, lam_hidden, lam_last
     )
@@ -190,6 +191,7 @@ def sharded_fleet_partial_fit(
     """
     if xs_new.shape[0] != fl.size:
         raise ValueError(f"update batch has {xs_new.shape[0]} tenants, fleet {fl.size}")
+    config = config.resolved()
     with warnings.catch_warnings():
         # train_errors grows on merge (the absorbed block's errors are
         # appended), so that one leaf legitimately cannot reuse its donated

@@ -33,7 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import activations
+from repro.core import activations, stats_backend
 
 Array = jnp.ndarray
 
@@ -88,13 +88,23 @@ def _targets(d: Array, act: activations.Activation) -> tuple[Array, Array]:
 # Sufficient statistics
 # ---------------------------------------------------------------------------
 
-def compute_stats(x: Array, d: Array, act: activations.Activation) -> RolannStats:
-    """Gram-form statistics for inputs x [m, n] and targets d [out, n]."""
+def compute_stats(
+    x: Array, d: Array, act: activations.Activation, *, backend: str | None = None
+) -> RolannStats:
+    """Gram-form statistics for inputs x [m, n] and targets d [out, n].
+
+    ``backend`` selects the Gram-stats producer (see `core.stats_backend`):
+    ``"einsum"`` (unfused XLA) or ``"fused"`` (the Pallas rolann_stats
+    kernel); None resolves from $REPRO_STATS_BACKEND.
+    """
     act = activations.get(act.name, invertible_required=True)
     xa = _augment(x)  # [m+1, n]
     dbar, fp = _targets(d, act)
-    m_vec = jnp.einsum("in,on->oi", xa, fp * fp * dbar)
+    fsq = fp * fp
     if act.name == "linear":
+        # Shared F: one [m, m] Gram for all outputs — a single matmul XLA
+        # already fuses; the per-output kernel has nothing to win here.
+        m_vec = jnp.einsum("in,on->oi", xa, fsq * dbar)
         g = xa @ xa.T
     else:
         # Per-output Gram: G_j = Xa diag(fp_j^2) Xa^T.  The output axis is
@@ -102,7 +112,7 @@ def compute_stats(x: Array, d: Array, act: activations.Activation) -> RolannStat
         # one is active (the paper's pool.map over cores, TPU-native).
         from repro.models import hints
 
-        g = jnp.einsum("in,on,jn->oij", xa, fp * fp, xa)
+        g, m_vec = stats_backend.gram_stats(xa, fsq, fsq * dbar, backend=backend)
         g = hints.hint(g, {0: "model"})
     return RolannStats(g=g, m=m_vec)
 
@@ -127,7 +137,7 @@ def compute_factors(x: Array, d: Array, act: activations.Activation) -> RolannFa
 
 
 def compute_factors_via_gram(
-    x: Array, d: Array, act: activations.Activation
+    x: Array, d: Array, act: activations.Activation, *, backend: str | None = None
 ) -> RolannFactors:
     """Paper-protocol factors (U, S, M) derived from the local Gram by eigh.
 
@@ -136,7 +146,7 @@ def compute_factors_via_gram(
     [m, n_local] matrix — at pod scale (n_local ~ 256k) the direct SVD's
     workspace is hundreds of GiB while this stays O(m^2) (EXPERIMENTS §Perf).
     """
-    return stats_to_factors(compute_stats(x, d, act))
+    return stats_to_factors(compute_stats(x, d, act, backend=backend))
 
 
 def stats_to_factors(stats: RolannStats) -> RolannFactors:
@@ -242,13 +252,17 @@ def fit(
     lam: float,
     *,
     method: str = "gram",
+    backend: str | None = None,
 ) -> tuple[Array, Array, RolannFactors | RolannStats]:
     """One-shot ROLANN fit. Returns (W, b, knowledge).
 
     method: "gram" (fast path, psum-mergeable) or "svd" (paper-faithful).
+    backend: Gram-stats producer for the "gram" method (stats_backend).
     """
     if method == "gram":
-        knowledge: RolannFactors | RolannStats = compute_stats(x, d, act)
+        knowledge: RolannFactors | RolannStats = compute_stats(
+            x, d, act, backend=backend
+        )
     elif method == "svd":
         knowledge = compute_factors(x, d, act)
     else:

@@ -84,6 +84,7 @@ def fit_on_mesh(
     Returns a DAEFModel whose weights are replicated and whose train_errors
     remain sharded over the data axes.
     """
+    config = config.resolved()
     f_hl = activations.get(config.act_hidden, invertible_required=True)
     f_ll = activations.get(config.act_last, invertible_required=True)
     keys = config.layer_keys()
@@ -119,6 +120,7 @@ def fit_on_mesh(
                 keys[li], h, sizes[li], f_hl,
                 init=config.init, method=config.method,
                 factorization=local_factorization,
+                backend=config.stats_backend,
             )
             if use_gram:
                 merged = _psum(local, axes)
@@ -138,9 +140,11 @@ def fit_on_mesh(
 
         # ---------------- last layer ----------------
         if use_gram:
-            local = rolann.compute_stats(h, xp, f_ll)
+            local = rolann.compute_stats(h, xp, f_ll, backend=config.stats_backend)
         elif local_factorization == "gram_eigh":
-            local = rolann.compute_factors_via_gram(h, xp, f_ll)
+            local = rolann.compute_factors_via_gram(
+                h, xp, f_ll, backend=config.stats_backend
+            )
         else:
             local = rolann.compute_factors(h, xp, f_ll)
         if use_gram:

@@ -1,0 +1,92 @@
+"""Pluggable backend for the per-output Gram sufficient statistics.
+
+DAEF's training cost is dominated by the per-layer statistics (paper Eq. 6-7
+in Gram form, DESIGN.md §1):
+
+    G[o] = Xa · diag(f'²[o]) · Xaᵀ        [o, m, m]
+    M[o] = Xa · (f'²[o] ∘ d̄[o])           [o, m]
+
+Every Gram-stats producer in the repo (``rolann.compute_stats``, the ELM-AE
+layer trainer, the vmapped fleet kernels and the mesh-sharded paths) routes
+through :func:`gram_stats`, which dispatches to one of two backends:
+
+* ``"einsum"`` (default) — three unfused XLA einsums, the seed-state path;
+* ``"fused"``  — the Pallas ``rolann_stats`` kernel: one HBM pass streams
+  the sample axis through VMEM and feeds both MXU contractions per tile
+  (``kernels/rolann_stats``).  On CPU the kernel runs in interpret mode —
+  numerically identical, but slower than XLA; select it on CPU only to
+  validate parity.  On TPU it is the hot-path win the ROADMAP asks for.
+
+Selection precedence: explicit ``backend=`` argument (or a non-None
+``DAEFConfig.stats_backend``) > the ``REPRO_STATS_BACKEND`` environment
+variable > ``"einsum"``.  Public entry points (``daef.fit``, the fleet and
+sharded wrappers, serve/CLI flags) resolve the environment variable *before*
+their jitted kernels trace, so the resolved choice is part of every jit
+cache key — the env var can never bake a stale backend into a cached trace.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+BACKENDS = ("einsum", "fused")
+ENV_VAR = "REPRO_STATS_BACKEND"
+DEFAULT = "einsum"
+
+Array = jnp.ndarray
+
+
+def resolve(backend: str | None = None) -> str:
+    """Concrete backend name: explicit arg > $REPRO_STATS_BACKEND > default."""
+    if backend is None:
+        backend = os.environ.get(ENV_VAR) or DEFAULT
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown stats backend {backend!r}: choose from {BACKENDS} "
+            f"(explicitly or via ${ENV_VAR})"
+        )
+    return backend
+
+
+def gram_stats(
+    xa: Array, fsq: Array, fd: Array, *, backend: str | None = None
+) -> tuple[Array, Array]:
+    """(G, M) per-output statistics for xa [m, n], fsq/fd [o, n].
+
+    Both backends accumulate in float32 on the contraction and return the
+    promoted input dtype, so they agree within accumulation-order error
+    (tests/test_stats_backend.py pins the tolerances).
+    """
+    backend = resolve(backend)
+    if backend == "fused":
+        from repro.kernels.rolann_stats import rolann_stats
+
+        return rolann_stats(xa, fsq, fd)
+    g = jnp.einsum("in,on,jn->oij", xa, fsq, xa)
+    m = jnp.einsum("in,on->oi", xa, fd)
+    return g, m
+
+
+def gram_stats_batched(
+    xa: Array, fsq: Array, fd: Array, *, backend: str | None = None
+) -> tuple[Array, Array]:
+    """Tenant-batched (G, M): xa [k, m, n], fsq/fd [k, o, n].
+
+    The fused path is a single batched kernel launch (grid over (k, o)),
+    not k separate dispatches.  Not yet on the fleet engine's hot path —
+    `fleet._fleet_fit` vmaps the unbatched `gram_stats` (Pallas supplies
+    the batching rule); wiring this variant under it is a ROADMAP item.
+    """
+    backend = resolve(backend)
+    if backend == "fused":
+        from repro.kernels.rolann_stats import rolann_stats_batched
+
+        return rolann_stats_batched(xa, fsq, fd)
+    g = jnp.einsum("kin,kon,kjn->koij", xa, fsq, xa)
+    m = jnp.einsum("kin,kon->koi", xa, fd)
+    return g, m
+
+
+__all__ = ["BACKENDS", "ENV_VAR", "DEFAULT", "resolve", "gram_stats",
+           "gram_stats_batched"]

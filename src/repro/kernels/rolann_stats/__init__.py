@@ -1,1 +1,5 @@
-from repro.kernels.rolann_stats.ops import rolann_stats, rolann_stats_ref  # noqa: F401
+from repro.kernels.rolann_stats.ops import (  # noqa: F401
+    rolann_stats,
+    rolann_stats_batched,
+    rolann_stats_ref,
+)

@@ -75,3 +75,63 @@ def rolann_stats_kernel(
         ],
         interpret=interpret,
     )(xa, fsq, fd)
+
+
+def _kernel_batched(x_ref, fsq_ref, fd_ref, g_ref, m_ref):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    x = x_ref[0]                         # [m, bn]
+    fsq = fsq_ref[0]                     # [1, bn]
+    fd = fd_ref[0]                       # [1, bn]
+    scaled = x * fsq                     # VPU
+    g_ref[0, 0] += jax.lax.dot_general(
+        scaled, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0] += jax.lax.dot_general(
+        x, fd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).T
+
+
+def rolann_stats_kernel_batched(
+    xa: jnp.ndarray,       # [k, m, n]
+    fsq: jnp.ndarray,      # [k, o, n]
+    fd: jnp.ndarray,       # [k, o, n]
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Tenant-batched variant: one kernel launch over a [k, ...] fleet axis.
+
+    Same accumulator-carry contract as the unbatched kernel with the n grid
+    dimension innermost; (k, o) pairs are independent, so the grid can be
+    parallelized over both leading dimensions on TPU.
+    """
+    k, m, n = xa.shape
+    o = fsq.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+
+    return pl.pallas_call(
+        _kernel_batched,
+        grid=(k, o, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, m, block_n), lambda ki, oi, ni: (ki, 0, ni)),
+            pl.BlockSpec((1, 1, block_n), lambda ki, oi, ni: (ki, oi, ni)),
+            pl.BlockSpec((1, 1, block_n), lambda ki, oi, ni: (ki, oi, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, m, m), lambda ki, oi, ni: (ki, oi, 0, 0)),
+            pl.BlockSpec((1, 1, m), lambda ki, oi, ni: (ki, oi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, o, m, m), jnp.float32),
+            jax.ShapeDtypeStruct((k, o, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xa, fsq, fd)

@@ -1,10 +1,22 @@
-"""Jit'd wrapper for the fused ROLANN statistics kernel.
+"""Jit'd wrappers for the fused ROLANN statistics kernel.
 
 On CPU (this container) the kernel body runs in interpret mode; on TPU it
 compiles to a Mosaic kernel.  ``rolann_stats`` pads the sample axis to the
 block size (zero samples contribute nothing to either G or M, so padding is
-exact) and defers to the oracle for tiny shapes where kernel overhead is not
-worth it.
+exact) and short-circuits degenerate shapes (empty sample/feature/output
+axes) where there is nothing to fuse.
+
+Dtype contract (matches ``rolann_stats_ref`` up to accumulation error): the
+MXU accumulates in float32 (``preferred_element_type``), and the results are
+returned in the *promoted input dtype* — bf16 in, bf16 out; f64 in (under
+``jax_enable_x64``), f64 out.  The one documented deviation from the oracle
+is that f64 inputs still accumulate in f32 inside the kernel, so the fused
+backend trades ~1e-7 relative error for the fusion win on x64 runs.
+
+``interpret`` resolution (None -> "am I on CPU?") happens *outside* the
+jitted body: the resolved value is part of the jit cache key, so a cached
+trace can never bake a stale backend decision in after the default backend
+changes (e.g. a host trace preceding TPU initialization).
 """
 from __future__ import annotations
 
@@ -13,15 +25,58 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.rolann_stats.kernel import rolann_stats_kernel
+from repro.kernels.rolann_stats.kernel import (
+    rolann_stats_kernel,
+    rolann_stats_kernel_batched,
+)
 from repro.kernels.rolann_stats.ref import rolann_stats_ref
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1)."""
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def _resolve_block_n(n: int, block_n: int) -> int:
+    """Clamp the requested sample-axis block to a sane lane-aligned size.
+
+    The padded block never exceeds 512 (VMEM pressure), never exceeds the
+    next power of two of ``n`` (no point padding 130 samples to 512), and
+    is floored at 128 lanes unless the caller asked for less explicitly.
+    """
+    if block_n < 1:
+        raise ValueError(f"block_n must be >= 1, got {block_n}")
+    cap = max(128, min(next_pow2(n), 512))
+    return min(block_n, cap)
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return jax.default_backend() == "cpu" if interpret is None else bool(interpret)
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _rolann_stats(xa, fsq, fd, *, block_n: int, interpret: bool):
+    m, n = xa.shape
+    o = fsq.shape[0]
+    out_dtype = jnp.result_type(xa, fsq, fd)
+    if n == 0 or m == 0 or o == 0:
+        return (jnp.zeros((o, m, m), out_dtype), jnp.zeros((o, m), out_dtype))
+    block_n = _resolve_block_n(n, block_n)
+    pad = (-n) % block_n
+    if pad:
+        xa = jnp.pad(xa, ((0, 0), (0, pad)))
+        fsq = jnp.pad(fsq, ((0, 0), (0, pad)))
+        fd = jnp.pad(fd, ((0, 0), (0, pad)))
+    g, mv = rolann_stats_kernel(
+        xa.astype(jnp.float32),
+        fsq.astype(jnp.float32),
+        fd.astype(jnp.float32),
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return g.astype(out_dtype), mv.astype(out_dtype)
+
+
 def rolann_stats(
     xa: jnp.ndarray,
     fsq: jnp.ndarray,
@@ -31,22 +86,56 @@ def rolann_stats(
     interpret: bool | None = None,
 ):
     """Fused (G, M) sufficient statistics.  xa [m, n]; fsq, fd [o, n]."""
-    if interpret is None:
-        interpret = _on_cpu()
-    m, n = xa.shape
-    block_n = min(block_n, max(128, 1 << (n - 1).bit_length() if n < 512 else 512))
+    return _rolann_stats(
+        xa, fsq, fd, block_n=block_n, interpret=_resolve_interpret(interpret)
+    )
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _rolann_stats_batched(xa, fsq, fd, *, block_n: int, interpret: bool):
+    k, m, n = xa.shape
+    o = fsq.shape[1]
+    out_dtype = jnp.result_type(xa, fsq, fd)
+    if n == 0 or m == 0 or o == 0 or k == 0:
+        return (
+            jnp.zeros((k, o, m, m), out_dtype),
+            jnp.zeros((k, o, m), out_dtype),
+        )
+    block_n = _resolve_block_n(n, block_n)
     pad = (-n) % block_n
     if pad:
-        xa = jnp.pad(xa, ((0, 0), (0, pad)))
-        fsq = jnp.pad(fsq, ((0, 0), (0, pad)))
-        fd = jnp.pad(fd, ((0, 0), (0, pad)))
-    return rolann_stats_kernel(
+        xa = jnp.pad(xa, ((0, 0), (0, 0), (0, pad)))
+        fsq = jnp.pad(fsq, ((0, 0), (0, 0), (0, pad)))
+        fd = jnp.pad(fd, ((0, 0), (0, 0), (0, pad)))
+    g, mv = rolann_stats_kernel_batched(
         xa.astype(jnp.float32),
         fsq.astype(jnp.float32),
         fd.astype(jnp.float32),
         block_n=block_n,
         interpret=interpret,
     )
+    return g.astype(out_dtype), mv.astype(out_dtype)
 
 
-__all__ = ["rolann_stats", "rolann_stats_ref"]
+def rolann_stats_batched(
+    xa: jnp.ndarray,
+    fsq: jnp.ndarray,
+    fd: jnp.ndarray,
+    *,
+    block_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Tenant-batched fused stats: xa [k, m, n]; fsq, fd [k, o, n].
+
+    One kernel launch for a whole tenant batch — the vmap-free entry point
+    for callers that hold a leading tenant axis.  NOTE: the fleet engine's
+    vmapped fit currently reaches the *unbatched* kernel through Pallas'
+    vmap batching rule; routing it through this single-launch variant is
+    the ROADMAP follow-up.
+    """
+    return _rolann_stats_batched(
+        xa, fsq, fd, block_n=block_n, interpret=_resolve_interpret(interpret)
+    )
+
+
+__all__ = ["rolann_stats", "rolann_stats_batched", "rolann_stats_ref", "next_pow2"]

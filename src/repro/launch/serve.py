@@ -51,8 +51,10 @@ def run_fleet(args) -> None:
     m0 = xs_train.shape[1]
 
     cfg = daef.DAEFConfig(
-        layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9
-    )
+        layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9,
+        stats_backend=args.stats_backend,
+    ).resolved()
+    print(f"fleet: Gram-stats backend '{cfg.stats_backend}'")
     t0 = time.perf_counter()
     if mesh is not None:
         # The host-built batch is placed BY SHARDING: each device pulls only
@@ -131,6 +133,12 @@ def main() -> None:
                     help="fleet mode: number of serving rounds")
     ap.add_argument("--scale", type=float, default=0.25,
                     help="fleet mode: synthetic dataset scale")
+    ap.add_argument("--stats-backend", default=None,
+                    choices=["einsum", "fused"],
+                    help="fleet mode: Gram-stats producer (default: "
+                         "$REPRO_STATS_BACKEND or einsum; 'fused' routes "
+                         "training stats through the Pallas rolann_stats "
+                         "kernel — interpret mode on CPU)")
     args = ap.parse_args()
 
     if args.fleet < 0:
@@ -139,6 +147,8 @@ def main() -> None:
         ap.error(f"--mesh-tenants must be >= 1, got {args.mesh_tenants}")
     if args.mesh_tenants and not args.fleet:
         ap.error("--mesh-tenants only applies to --fleet mode")
+    if args.stats_backend and not args.fleet:
+        ap.error("--stats-backend only applies to --fleet mode")
     if args.fleet and args.rounds < 1:
         ap.error(f"--rounds must be >= 1, got {args.rounds}")
     if args.fleet:

@@ -1,5 +1,7 @@
 """DAEF head on backbone activations — the paper's technique as a library
 component attached to the assigned architectures."""
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,6 +22,7 @@ def test_head_flags_feature_shift():
     assert float(flags_norm.mean()) < 0.35
 
 
+@pytest.mark.slow
 def test_head_on_backbone_states():
     cfg = registry.get("qwen2-1.5b").reduced()
     bundle = get_bundle(cfg, chunked_attn=False)

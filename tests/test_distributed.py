@@ -37,6 +37,7 @@ def test_daef_fit_on_mesh_matches_host():
     assert "DIFFS" in out
 
 
+@pytest.mark.slow
 def test_daef_fit_on_mesh_svd_method():
     out = _run("""
     import dataclasses
@@ -62,6 +63,7 @@ def test_daef_fit_on_mesh_svd_method():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     out = _run("""
     from repro import optim

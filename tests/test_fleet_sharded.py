@@ -55,6 +55,7 @@ def test_sharded_fit_scores_split_across_devices(method):
     assert "SPLIT OK" in out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("method", ["gram", "svd"])
 def test_merge_tree_butterfly_matches_sequential(method):
     """Group sizes that span 1, 2 and 8 devices (K=16 on D=8 -> local_k=2):
@@ -85,6 +86,7 @@ def test_merge_tree_butterfly_matches_sequential(method):
         assert f"TREE OK {g}" in out
 
 
+@pytest.mark.slow
 def test_sharded_partial_fit_donates_and_matches():
     out = run_on_devices(_COMMON, """
     cfg = daef.DAEFConfig(layer_sizes=(M0, 3, 5, M0), lam_hidden=0.7, lam_last=0.9)

@@ -9,7 +9,12 @@ from repro.testing.proptest import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
-from repro.kernels.rolann_stats import rolann_stats, rolann_stats_ref
+from repro.kernels.rolann_stats import (
+    rolann_stats,
+    rolann_stats_batched,
+    rolann_stats_ref,
+)
+from repro.kernels.rolann_stats.ops import next_pow2
 
 
 # ---------------------------------------------------------------------------
@@ -35,18 +40,105 @@ def test_rolann_stats_shape_sweep(m, n, o, seed):
     np.testing.assert_allclose(mv, mr, atol=2e-4 * scale)
 
 
+@settings(max_examples=6, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=4),
+    m=st.integers(min_value=2, max_value=20),
+    n=st.integers(min_value=8, max_value=300),
+    o=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_rolann_stats_batched_vs_oracle(k, m, n, o, seed):
+    """The tenant-batched kernel == the per-tenant oracle, per tenant."""
+    rng = np.random.default_rng(seed)
+    xa = jnp.asarray(rng.normal(size=(k, m, n)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.05, 1.0, size=(k, o, n)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(k, o, n)), jnp.float32)
+    g, mv = rolann_stats_batched(xa, fsq, fd, block_n=128)
+    gr, mr = jax.vmap(rolann_stats_ref)(xa, fsq, fd)
+    scale = max(1.0, float(jnp.abs(gr).max()))
+    np.testing.assert_allclose(g, gr, atol=2e-4 * scale)
+    np.testing.assert_allclose(mv, mr, atol=2e-4 * scale)
+
+
+def test_rolann_stats_vmap_matches_batched_entry():
+    """jax.vmap over the unbatched wrapper == the explicit batched kernel."""
+    rng = np.random.default_rng(3)
+    xa = jnp.asarray(rng.normal(size=(3, 6, 200)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.1, 1, (3, 2, 200)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(3, 2, 200)), jnp.float32)
+    g_v, m_v = jax.vmap(rolann_stats)(xa, fsq, fd)
+    g_b, m_b = rolann_stats_batched(xa, fsq, fd)
+    np.testing.assert_allclose(np.asarray(g_v), np.asarray(g_b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_v), np.asarray(m_b), atol=1e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rolann_stats_dtypes(dtype):
+    """Results come back in the promoted *input* dtype (no silent f32
+    widening of bf16, no silent f32 downcast of wider inputs), accumulated
+    in f32 — so values track the f32 oracle within dtype rounding."""
     rng = np.random.default_rng(0)
     xa = jnp.asarray(rng.normal(size=(16, 512)), dtype)
     fsq = jnp.asarray(rng.uniform(0.1, 1, (4, 512)), dtype)
     fd = jnp.asarray(rng.normal(size=(4, 512)), dtype)
     g, mv = rolann_stats(xa, fsq, fd)
+    assert g.dtype == dtype and mv.dtype == dtype
     gr, mr = rolann_stats_ref(
         xa.astype(jnp.float32), fsq.astype(jnp.float32), fd.astype(jnp.float32)
     )
     tol = 1e-3 if dtype == jnp.float32 else 0.3
-    np.testing.assert_allclose(g, gr, atol=tol * float(jnp.abs(gr).max()))
+    np.testing.assert_allclose(
+        g.astype(jnp.float32), gr, atol=tol * float(jnp.abs(gr).max())
+    )
+    np.testing.assert_allclose(
+        mv.astype(jnp.float32), mr, atol=tol * float(jnp.abs(mr).max())
+    )
+
+
+def test_rolann_stats_float64_roundtrip():
+    """Under jax_enable_x64, f64 inputs come back f64 (accumulation is f32,
+    so values carry f32-level error — dtype parity is the contract)."""
+    from jax.experimental import enable_x64
+
+    rng = np.random.default_rng(1)
+    with enable_x64():
+        xa = jnp.asarray(rng.normal(size=(8, 256)), jnp.float64)
+        fsq = jnp.asarray(rng.uniform(0.1, 1, (3, 256)), jnp.float64)
+        fd = jnp.asarray(rng.normal(size=(3, 256)), jnp.float64)
+        g, mv = rolann_stats(xa, fsq, fd)
+        assert g.dtype == jnp.float64 and mv.dtype == jnp.float64
+        gr, mr = rolann_stats_ref(xa, fsq, fd)
+        scale = float(jnp.abs(gr).max())
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-4 * scale)
+        np.testing.assert_allclose(np.asarray(mv), np.asarray(mr), atol=1e-4 * scale)
+
+
+def test_rolann_stats_degenerate_shapes():
+    """Empty/unit sample axes no longer break the block heuristic."""
+    g, mv = rolann_stats(jnp.zeros((4, 0)), jnp.zeros((2, 0)), jnp.zeros((2, 0)))
+    assert g.shape == (2, 4, 4) and mv.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+    np.testing.assert_array_equal(np.asarray(mv), 0.0)
+
+    xa = jnp.asarray([[2.0], [3.0]])
+    fsq = jnp.asarray([[0.5]])
+    fd = jnp.asarray([[4.0]])
+    g, mv = rolann_stats(xa, fsq, fd)  # n == 1: pads one 128-lane block
+    gr, mr = rolann_stats_ref(xa, fsq, fd)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(mr), atol=1e-6)
+
+    g, mv = rolann_stats_batched(
+        jnp.zeros((0, 3, 16)), jnp.zeros((0, 2, 16)), jnp.zeros((0, 2, 16))
+    )
+    assert g.shape == (0, 2, 3, 3) and mv.shape == (0, 2, 3)
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 4, 5, 127, 128, 129, 511, 512)] == [
+        1, 1, 2, 4, 4, 8, 128, 128, 256, 512, 512,
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -62,6 +154,7 @@ def _fa_ref(q, k, v, **kw):
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(
     b=st.integers(min_value=1, max_value=3),

@@ -98,6 +98,7 @@ def test_predict_reduces_training_error():
     assert err_fit < err_zero
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(
     st.integers(min_value=2, max_value=10),

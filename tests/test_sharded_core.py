@@ -21,6 +21,7 @@ x = jnp.asarray(x)
 """
 
 
+@pytest.mark.slow
 def test_predict_on_mesh_matches_host_predict():
     out = run_on_devices(_DATA, """
     cfg = daef.DAEFConfig(layer_sizes=(9, 3, 5, 9), lam_hidden=0.5, lam_last=0.9)
@@ -39,6 +40,7 @@ def test_predict_on_mesh_matches_host_predict():
     assert "PREDICT OK" in out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("method", ["gram", "svd"])
 def test_fit_on_mesh_deeper_decoder(method):
     """Two decoder hidden layers — exercises the per-layer knowledge merge
@@ -78,6 +80,7 @@ def test_fit_on_mesh_local_svd_factorization():
     assert "FACTORIZATION OK" in out
 
 
+@pytest.mark.slow
 def test_fit_on_mesh_multi_axis_data_mesh():
     """Collectives that loop over several data axes (('pod', 'data'))."""
     out = run_on_devices(_DATA, """
@@ -94,6 +97,7 @@ def test_fit_on_mesh_multi_axis_data_mesh():
     assert "MULTIAXIS OK" in out
 
 
+@pytest.mark.slow
 def test_fit_on_mesh_train_errors_stay_sharded_in_order():
     """train_errors come back sharded over the data axes but in sample
     order, so host-side thresholding sees the same values as daef.fit."""

@@ -1,3 +1,5 @@
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -46,6 +48,7 @@ def test_ssd_chunk_size_invariance():
     np.testing.assert_allclose(y8, y32, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_mamba2_decode_matches_forward():
     cfg = registry.get("mamba2-780m").reduced()
     params = mamba2.init_params(jax.random.PRNGKey(0), cfg)
@@ -85,6 +88,7 @@ def test_rglru_layout():
     assert cfg.attn_layers == 12
 
 
+@pytest.mark.slow
 def test_recurrentgemma_decode_matches_forward():
     cfg = registry.get("recurrentgemma-9b").reduced()
     params = rglru.init_params(jax.random.PRNGKey(0), cfg)

@@ -1,0 +1,227 @@
+"""Stats-backend parity: the fused Pallas Gram-stats kernel and the unfused
+einsum path must be interchangeable everywhere stats are produced —
+single-model fit, vmapped fleet, mesh-sharded fleet/core, federated fit and
+incremental updates — at the per-dtype tolerances test_parity.py establishes
+for execution-path parity.  (Same data, same randomness, two backends.)
+"""
+import dataclasses
+import os
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import daef, federated, fleet, fleet_sharded, rolann, stats_backend
+from repro.core import activations
+from repro.testing.proptest import given, settings, st
+
+# Same bar as tests/test_parity.py's execution-path parity.
+TOLS = {
+    "float32": dict(atol=1e-4, rtol=1e-4),
+    "float64": dict(atol=1e-9, rtol=1e-9),
+}
+
+M0, LATENT = 7, 3
+LAYERS = (M0, LATENT, 5, M0)
+
+
+def _cfgs(method: str = "gram"):
+    base = daef.DAEFConfig(
+        layer_sizes=LAYERS, lam_hidden=0.7, lam_last=0.9, method=method
+    )
+    return (dataclasses.replace(base, stats_backend="einsum"),
+            dataclasses.replace(base, stats_backend="fused"))
+
+
+def _data(k: int, n: int, seed: int, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(k, LATENT, n))
+    mix = rng.normal(size=(k, M0, LATENT))
+    x = np.einsum("kmr,krn->kmn", mix, np.tanh(z))
+    x = x + 0.1 * rng.normal(size=(k, M0, n))
+    x = (x - x.mean(axis=2, keepdims=True)) / x.std(axis=2, keepdims=True)
+    return jnp.asarray(x, dtype)
+
+
+def _assert_trees_close(a, b, *, what: str):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        tol = TOLS[str(np.asarray(la).dtype)]
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), err_msg=what, **tol
+        )
+
+
+# ---------------------------------------------------------------------------
+# resolution semantics
+# ---------------------------------------------------------------------------
+
+def test_resolve_precedence_and_validation():
+    assert stats_backend.resolve(None) == "einsum"
+    assert stats_backend.resolve("fused") == "fused"
+    with mock.patch.dict(os.environ, {stats_backend.ENV_VAR: "fused"}):
+        assert stats_backend.resolve(None) == "fused"
+        assert stats_backend.resolve("einsum") == "einsum"  # arg wins over env
+        assert daef.DAEFConfig(layer_sizes=LAYERS).resolved().stats_backend == "fused"
+    with mock.patch.dict(os.environ, {stats_backend.ENV_VAR: "bogus"}):
+        with pytest.raises(ValueError, match="unknown stats backend"):
+            stats_backend.resolve(None)
+    with pytest.raises(ValueError, match="unknown stats backend"):
+        daef.DAEFConfig(layer_sizes=LAYERS, stats_backend="bogus")
+
+
+def test_resolved_config_is_concrete_and_idempotent():
+    cfg = daef.DAEFConfig(layer_sizes=LAYERS)
+    assert cfg.stats_backend is None
+    res = cfg.resolved()
+    assert res.stats_backend == "einsum"
+    assert res.resolved() is res  # already concrete: no copy
+
+
+# ---------------------------------------------------------------------------
+# gram_stats dispatch parity (the primitive both pipelines consume)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=24),
+    n=st.integers(min_value=4, max_value=400),
+    o=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_gram_stats_backend_parity(m, n, o, seed):
+    rng = np.random.default_rng(seed)
+    xa = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.05, 1.0, (o, n)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(o, n)), jnp.float32)
+    ge, me = stats_backend.gram_stats(xa, fsq, fd, backend="einsum")
+    gf, mf = stats_backend.gram_stats(xa, fsq, fd, backend="fused")
+    assert ge.dtype == gf.dtype and me.dtype == mf.dtype
+    scale = max(1.0, float(jnp.abs(ge).max()))
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(ge), atol=2e-4 * scale)
+    np.testing.assert_allclose(np.asarray(mf), np.asarray(me), atol=2e-4 * scale)
+
+
+def test_gram_stats_batched_backend_parity():
+    rng = np.random.default_rng(0)
+    xa = jnp.asarray(rng.normal(size=(3, 6, 160)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.05, 1.0, (3, 4, 160)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(3, 4, 160)), jnp.float32)
+    ge, me = stats_backend.gram_stats_batched(xa, fsq, fd, backend="einsum")
+    gf, mf = stats_backend.gram_stats_batched(xa, fsq, fd, backend="fused")
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(ge), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(mf), np.asarray(me), atol=2e-4)
+
+
+def test_compute_stats_backend_parity():
+    act = activations.get("logsig", invertible_required=True)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(M0, 80)), jnp.float32)
+    d = jnp.asarray(rng.uniform(0.1, 0.9, (4, 80)), jnp.float32)
+    se = rolann.compute_stats(x, d, act, backend="einsum")
+    sf = rolann.compute_stats(x, d, act, backend="fused")
+    _assert_trees_close(se, sf, what="compute_stats einsum vs fused")
+    fe = rolann.compute_factors_via_gram(x, d, act, backend="fused")
+    np.testing.assert_allclose(  # factor round-trip carries the same Gram
+        np.asarray(rolann.factors_to_stats(fe).g), np.asarray(se.g), atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# pipeline parity: fit / predict / scores / merge, loop == vmap == sharded
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(data_seed=st.integers(0, 7))
+def test_fit_predict_scores_backend_parity(data_seed):
+    k, n = 2, 72
+    cfg_e, cfg_f = _cfgs()
+    xs = _data(k, n, data_seed)
+    seeds = jnp.arange(k)
+    tol = TOLS["float32"]
+
+    # loop (single-model core)
+    for i in range(k):
+        me = daef.fit(dataclasses.replace(cfg_e, seed=i), xs[i])
+        mf = daef.fit(dataclasses.replace(cfg_f, seed=i), xs[i])
+        _assert_trees_close(me, mf, what=f"daef.fit backend parity, tenant {i}")
+        np.testing.assert_allclose(
+            np.asarray(daef.predict(cfg_f, mf, xs[i])),
+            np.asarray(daef.predict(cfg_e, me, xs[i])), **tol,
+        )
+        np.testing.assert_allclose(
+            np.asarray(daef.reconstruction_error(cfg_f, mf, xs[i])),
+            np.asarray(daef.reconstruction_error(cfg_e, me, xs[i])), **tol,
+        )
+
+    # vmap fleet
+    fe = fleet.fleet_fit(cfg_e, xs, seeds=seeds)
+    ff = fleet.fleet_fit(cfg_f, xs, seeds=seeds)
+    _assert_trees_close(fe.model, ff.model, what="fleet_fit backend parity")
+    np.testing.assert_allclose(
+        np.asarray(fleet.fleet_scores(cfg_f, ff, xs)),
+        np.asarray(fleet.fleet_scores(cfg_e, fe, xs)), **tol,
+    )
+
+    # mesh-sharded fleet (1-shard mesh in tier-1; split for real in CI's
+    # multi-device job)
+    d = len(jax.devices())
+    while d > 1 and k % d:
+        d //= 2
+    mesh = fleet_sharded.tenant_mesh(d)
+    fs = fleet_sharded.sharded_fleet_fit(cfg_f, np.asarray(xs), mesh, seeds=seeds)
+    _assert_trees_close(fs.model, fe.model, what="sharded fused vs vmap einsum")
+
+
+def test_merge_and_partial_fit_backend_parity():
+    k = 2
+    cfg_e, cfg_f = _cfgs()
+    xa, xb = _data(k, 64, 1), _data(k, 64, 101)
+    seeds = jnp.arange(k)
+
+    fae, fbe = (fleet.fleet_fit(cfg_e, x, seeds=seeds) for x in (xa, xb))
+    faf, fbf = (fleet.fleet_fit(cfg_f, x, seeds=seeds) for x in (xa, xb))
+    _assert_trees_close(
+        fleet.fleet_merge(cfg_f, faf, fbf).model,
+        fleet.fleet_merge(cfg_e, fae, fbe).model,
+        what="fleet_merge backend parity",
+    )
+    _assert_trees_close(
+        fleet.fleet_partial_fit(cfg_f, faf, xb).model,
+        fleet.fleet_partial_fit(cfg_e, fae, xb).model,
+        what="fleet_partial_fit backend parity",
+    )
+
+
+def test_merge_tree_backend_parity():
+    k, group = 4, 2
+    cfg_e, cfg_f = _cfgs()
+    xs = _data(k, 48, 9)
+    seeds = jnp.repeat(jnp.arange(k // group), group)
+    fe = fleet.fleet_fit(cfg_e, xs, seeds=seeds)
+    ff = fleet.fleet_fit(cfg_f, xs, seeds=seeds)
+    te = fleet_sharded.fleet_merge_tree(cfg_e, fe, group)
+    tf = fleet_sharded.fleet_merge_tree(cfg_f, ff, group)
+    _assert_trees_close(tf.model, te.model, what="merge_tree backend parity")
+
+
+def test_federated_fit_backend_parity():
+    cfg_e, cfg_f = _cfgs()
+    x = _data(1, 96, 17)[0]
+    parts = [x[:, :48], x[:, 48:]]
+    _assert_trees_close(
+        federated.federated_fit(cfg_f, parts),
+        federated.federated_fit(cfg_e, parts),
+        what="federated_fit backend parity",
+    )
+
+
+def test_svd_method_ignores_backend_but_accepts_it():
+    """method='svd' computes factors directly (no Gram) — a fused config must
+    still work and match einsum exactly there."""
+    cfg_e, cfg_f = _cfgs(method="svd")
+    x = _data(1, 64, 3)[0]
+    _assert_trees_close(
+        daef.fit(cfg_f, x), daef.fit(cfg_e, x), what="svd method backend-independence"
+    )

@@ -1,4 +1,6 @@
 """End-to-end behaviour tests for the paper's system (DAEF pipeline)."""
+import pytest
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,6 +23,7 @@ def test_paper_pipeline_end_to_end():
     assert met.f1 > 0.6, met
 
 
+@pytest.mark.slow
 def test_daef_vs_iterative_ae_claims():
     """Paper claims: F1 parity and a large training-time advantage."""
     import time
