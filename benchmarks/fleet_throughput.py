@@ -1,18 +1,20 @@
-"""Fleet throughput: loop vs vmap fleet vs mesh-sharded fleet.
+"""Fleet throughput: the engine's loop vs vmap vs mesh plans, one facade.
 
-Sequential baselines:
+The benchmark is now literally a comparison of ``ExecutionPlan``s — the same
+``DAEFEngine`` API runs every path:
 
-* ``loop`` — the status quo: ``daef.fit`` called per tenant (eager, the
-  only per-model API before the fleet engine existed);
+* ``loop``  — ``ExecutionPlan(mode="loop")``: eager per-model calls, the
+  status-quo API before the fleet engine existed;
 * ``jit_loop`` — the strongest sequential contender: the single-model core
   jitted ONCE and reused across tenants (identical shapes, so the loop pays
-  only dispatch overhead, not retracing).
-
-The ``fleet`` path trains / scores every tenant in one jitted vmap call;
-the ``sharded`` path is the same kernel with the tenant axis sharded over
-a 'tenants' device-mesh axis (K/D tenants per device — run under
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see it on a
-laptop), plus the on-mesh tree-reduce federation ``fleet_merge_tree``.
+  only dispatch overhead, not retracing) — kept as a manual baseline outside
+  the facade;
+* ``vmap``  — ``ExecutionPlan(mode="vmap")``: every tenant in one jitted
+  dispatch;
+* ``mesh``  — ``ExecutionPlan(mode="mesh")``: the same kernel with the
+  tenant axis sharded over a 'tenants' device-mesh axis (run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see it on a
+  laptop), plus the on-mesh tree-reduce federation (``merge="tree"``).
 
 Reported numbers: models/sec (training) and scores/sec (serving), plus the
 fleet speedups.  The full record is written as JSON (``--out``, default
@@ -26,14 +28,14 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from functools import partial
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import daef, fleet, fleet_sharded
+from repro.core import daef
+from repro.engine import DAEFEngine, ExecutionPlan
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
@@ -56,18 +58,28 @@ def main(k: int = 64, m0: int = 16, n: int = 256, repeats: int = 3) -> dict:
     xs = jnp.asarray(rng.normal(size=(k, m0, n)), jnp.float32)
     seeds = jnp.arange(k, dtype=jnp.int32)
 
-    # ---- per-model Python loop (status-quo API: eager daef.fit) ----
-    import dataclasses
+    # ---- engine plans: one facade, three placements ----
+    n_dev = len(jax.devices())
+    d = n_dev
+    while d > 1 and k % d:
+        d //= 2
+    engines = {
+        "loop": DAEFEngine(cfg, ExecutionPlan(mode="loop", tenants=k)),
+        "vmap": DAEFEngine(cfg, ExecutionPlan(mode="vmap", tenants=k)),
+        "mesh": DAEFEngine(cfg, ExecutionPlan(mode="mesh", tenants=k,
+                                              mesh_devices=d, merge="tree")),
+    }
 
-    def eager_loop_fit():
-        return [
-            daef.fit(dataclasses.replace(cfg, seed=i), xs[i]) for i in range(k)
-        ]
-
-    eager_loop_fit()  # warm the trace caches of the eager primitives
-    models, t_eager = _timed(eager_loop_fit, repeats=max(1, repeats - 2))
+    # ---- loop plan (status-quo API: eager per-model daef.fit) ----
+    eng_loop = engines["loop"]
+    eng_loop.fit(xs, seeds=seeds)  # warm the trace caches of the eager core
+    fl_loop, t_eager = _timed(
+        lambda: eng_loop.fit(xs, seeds=seeds), repeats=max(1, repeats - 2)
+    )
 
     # ---- per-model loop, jitted once and reused for every tenant ----
+    # (manual baseline: the facade has no "jit the scalar core yourself"
+    # plan; this is what a careful user could hand-write.)
     @jax.jit
     def fit_one(x, seed):
         keys = daef.layer_keys_from_seed(seed, len(cfg.layer_sizes))
@@ -78,53 +90,50 @@ def main(k: int = 64, m0: int = 16, n: int = 256, repeats: int = 3) -> dict:
     def loop_fit(xs, seeds):
         return [fit_one(xs[i], seeds[i]) for i in range(k)]
 
-    models_jit, t_loop = _timed(loop_fit, xs, seeds, repeats=repeats)
+    _, t_loop = _timed(loop_fit, xs, seeds, repeats=repeats)
 
-    # ---- fleet path ----
-    fleet.fleet_fit(cfg, xs, seeds=seeds)  # compile
-    fl, t_fleet = _timed(
-        lambda: fleet.fleet_fit(cfg, xs, seeds=seeds), repeats=repeats
-    )
+    # ---- vmap plan ----
+    eng_vmap = engines["vmap"]
+    eng_vmap.fit(xs, seeds=seeds)  # compile
+    fl, t_fleet = _timed(lambda: eng_vmap.fit(xs, seeds=seeds), repeats=repeats)
 
-    # sanity: same models up to float error
-    ref = fleet.get_model(fl, 3)
+    # sanity: same models up to float error across plans
+    ref = eng_vmap.get_model(fl, 3)
     np.testing.assert_allclose(
-        np.asarray(ref.weights[-1]), np.asarray(models[3].weights[-1]), atol=1e-4
+        np.asarray(ref.weights[-1]),
+        np.asarray(eng_loop.get_model(fl_loop, 3).weights[-1]), atol=1e-4,
     )
 
     # ---- serving: score a padded tenant batch ----
+    from functools import partial
+
     score_one = jax.jit(partial(daef.reconstruction_error, cfg))
+    models = [eng_loop.get_model(fl_loop, i) for i in range(k)]
     score_one(models[0], xs[0])  # compile
 
     def loop_score(models, xs):
         return [score_one(models[i], xs[i]) for i in range(k)]
 
     _, ts_loop = _timed(loop_score, models, xs, repeats=repeats)
-    fleet.fleet_scores(cfg, fl, xs)  # compile
-    _, ts_fleet = _timed(lambda: fleet.fleet_scores(cfg, fl, xs), repeats=repeats)
+    eng_vmap.scores(fl, xs)  # compile
+    _, ts_fleet = _timed(lambda: eng_vmap.scores(fl, xs), repeats=repeats)
 
-    # ---- mesh-sharded fleet: same kernels, tenant axis split over devices ----
-    n_dev = len(jax.devices())
-    d = n_dev
-    while d > 1 and k % d:
-        d //= 2
-    mesh = fleet_sharded.tenant_mesh(d)
+    # ---- mesh plan: same kernels, tenant axis split over devices ----
+    eng_mesh = engines["mesh"]
     xs_host = np.asarray(xs)
 
-    def sharded_fit():
-        return fleet_sharded.sharded_fleet_fit(cfg, xs_host, mesh, seeds=seeds)
+    eng_mesh.fit(xs_host, seeds=seeds)  # compile
+    fl_sh, t_sharded = _timed(
+        lambda: eng_mesh.fit(xs_host, seeds=seeds), repeats=repeats
+    )
 
-    sharded_fit()  # compile
-    fl_sh, t_sharded = _timed(sharded_fit, repeats=repeats)
-
-    fleet_sharded.sharded_fleet_scores(cfg, fl_sh, xs_host, mesh=mesh)  # compile
+    eng_mesh.scores(fl_sh, xs_host)  # compile
     _, ts_sharded = _timed(
-        lambda: fleet_sharded.sharded_fleet_scores(cfg, fl_sh, xs_host, mesh=mesh),
-        repeats=repeats,
+        lambda: eng_mesh.scores(fl_sh, xs_host), repeats=repeats
     )
 
     # on-mesh tree-reduce federation (all tenants share seed 0 for the bench)
-    fl_m = fleet_sharded.sharded_fleet_fit(cfg, xs_host, mesh)
+    fl_m = eng_mesh.fit(xs_host)
     local_k = k // d
     group = min(8, k & -k)  # largest power of two dividing k, capped at 8
     while group > 1 and not (
@@ -133,10 +142,9 @@ def main(k: int = 64, m0: int = 16, n: int = 256, repeats: int = 3) -> dict:
     ):
         group //= 2
     if group > 1:
-        fleet_sharded.fleet_merge_tree(cfg, fl_m, group, mesh=mesh)  # compile
+        eng_mesh.reduce(fl_m, group)  # compile
         _, t_merge_tree = _timed(
-            lambda: fleet_sharded.fleet_merge_tree(cfg, fl_m, group, mesh=mesh),
-            repeats=repeats,
+            lambda: eng_mesh.reduce(fl_m, group), repeats=repeats
         )
     else:
         # group_size=1 is a no-op by contract — a timing of it would record
@@ -146,6 +154,7 @@ def main(k: int = 64, m0: int = 16, n: int = 256, repeats: int = 3) -> dict:
         t_merge_tree = None
 
     result = {
+        "api": "repro.engine.DAEFEngine",
         "devices": n_dev,
         "mesh_tenant_devices": d,
         "tenants": k,

@@ -34,6 +34,7 @@ def section_federated() -> list[str]:
     import numpy as np
 
     from repro.core import daef, federated
+    from repro.engine import DAEFEngine, ExecutionPlan
 
     rng = np.random.default_rng(0)
     z = rng.normal(size=(4, 4000))
@@ -43,8 +44,9 @@ def section_federated() -> list[str]:
     )
     cfg = daef.DAEFConfig(layer_sizes=(16, 4, 8, 16), lam_hidden=0.1, lam_last=0.5)
     parts = [jnp.asarray(x[:, i * 1000 : (i + 1) * 1000]) for i in range(4)]
-    fed = federated.federated_fit(cfg, parts)
-    cen = daef.fit(cfg, jnp.asarray(x))
+    engine = DAEFEngine(cfg, ExecutionPlan(merge="sequential"))
+    fed = engine.session().round(parts)
+    cen = engine.fit(jnp.asarray(x))
     max_diff = max(
         float(jnp.abs(a - b).max()) for a, b in zip(fed.weights, cen.weights)
     )

@@ -1,20 +1,113 @@
-"""Serving latency microbenchmark: decode ms/token per family (CPU, reduced
-configs) — the host-measurable counterpart of the decode-shape rooflines."""
+"""Serving latency microbenchmark.
+
+Two sections:
+
+* **DAEF fleet serving (default)** — the `repro.engine` facade end to end:
+  train K per-tenant anomaly detectors under an ``ExecutionPlan`` (vmap, and
+  mesh when more than one device is visible), then measure per-round scoring
+  latency over padded ragged request batches — p50/p95 ms/round and
+  scores/sec, the numbers `launch/serve.py --fleet` prints, measured
+  repeatably.  Each run APPENDS one record per plan to the in-tree
+  trajectory ``BENCH_serve.json`` (a JSON list, committed per PR so the
+  serving-latency history accumulates; CI uploads it as an artifact).
+* **LM decode (``--lm``)** — decode ms/token per architecture family (CPU,
+  reduced configs), the host-measurable counterpart of the decode-shape
+  rooflines.
+
+  PYTHONPATH=src python benchmarks/serve_latency.py [--tenants 32] [--lm]
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import registry
-from repro.models import get_bundle
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 ARCHS = ["qwen2-1.5b", "qwen2-moe-a2.7b", "mamba2-780m", "recurrentgemma-9b",
          "deepseek-v2-236b"]
 
 
-def main(archs=None, gen: int = 24) -> list[str]:
+def fleet_records(k: int = 32, m0: int = 16, n_train: int = 256,
+                  n_pad: int = 64, rounds: int = 20) -> list[dict]:
+    """Engine-served fleet scoring latency, one record per ExecutionPlan."""
+    from repro.core import daef
+    from repro.engine import DAEFEngine, ExecutionPlan
+
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9,
+                          lam_last=0.9)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(k, m0, n_train)).astype(np.float32)
+
+    plans = {"vmap": ExecutionPlan(mode="vmap", tenants=k)}
+    n_dev = len(jax.devices())
+    if n_dev > 1 and k % min(n_dev, k) == 0:
+        plans["mesh"] = ExecutionPlan(mode="mesh", tenants=k,
+                                      mesh_devices=min(n_dev, k))
+
+    records = []
+    for name, plan in plans.items():
+        engine = DAEFEngine(cfg, plan)
+        fl = engine.fit(xs, seeds=jnp.arange(k))
+        mus = engine.thresholds(fl, rule="q90")
+        lat, served = [], 0
+        for r in range(rounds + 1):  # round 0 = JIT warm-up, excluded
+            counts = rng.integers(1, n_pad + 1, size=k)
+            batch = np.zeros((k, m0, n_pad), np.float32)
+            for t in range(k):
+                batch[t, :, : counts[t]] = rng.normal(
+                    size=(m0, counts[t])
+                ).astype(np.float32)
+            t0 = time.perf_counter()
+            scores = engine.scores(fl, batch, n_valid=jnp.asarray(counts))
+            flags = engine.classify(scores, mus)
+            jax.block_until_ready(flags)
+            if r:
+                lat.append(time.perf_counter() - t0)
+                served += int(counts.sum())
+        lat_ms = sorted(x * 1e3 for x in lat)
+        records.append({
+            "api": "repro.engine.DAEFEngine",
+            "plan": name,
+            "devices": n_dev,
+            "tenants": k,
+            "pad": n_pad,
+            "rounds": rounds,
+            "p50_ms_per_round": lat_ms[len(lat_ms) // 2],
+            "p95_ms_per_round": lat_ms[max(0, int(len(lat_ms) * 0.95) - 1)],
+            "scores_per_sec": served / max(sum(lat), 1e-9),
+        })
+        print(f"fleet[{name}]: p50 {records[-1]['p50_ms_per_round']:.2f} ms/round, "
+              f"{records[-1]['scores_per_sec']:.0f} scores/sec "
+              f"({n_dev} device(s))")
+    return records
+
+
+def append_trajectory(records: list[dict], out: str) -> None:
+    """Append records to the JSON-list trajectory at ``out``."""
+    path = Path(out)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+            assert isinstance(history, list)
+        except (ValueError, AssertionError):
+            history = []
+    history.extend(records)
+    path.write_text(json.dumps(history, indent=2, sort_keys=True) + "\n")
+    print(f"appended {len(records)} record(s) -> {out} "
+          f"({len(history)} total in trajectory)")
+
+
+def lm_lines(archs=None, gen: int = 24) -> list[str]:
+    from repro.configs import registry
+    from repro.models import get_bundle
+
     lines = ["arch,family,decode_ms_per_token"]
     for name in archs or ARCHS:
         cfg = registry.get(name).reduced()
@@ -35,5 +128,24 @@ def main(archs=None, gen: int = 24) -> list[str]:
     return lines
 
 
+def main(archs=None, gen: int = 24) -> list[str]:
+    """Back-compat hook (benchmarks.run): the LM decode table."""
+    return lm_lines(archs=archs, gen=gen)
+
+
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tenants", type=int, default=32)
+    ap.add_argument("--pad", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--lm", action="store_true",
+                    help="also run the per-arch LM decode table")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"),
+                    help="append fleet-serving records to this JSON-list "
+                         "trajectory (default: repo root, committed per PR)")
+    args = ap.parse_args()
+    recs = fleet_records(k=args.tenants, n_pad=args.pad, rounds=args.rounds)
+    if args.out:
+        append_trajectory(recs, args.out)
+    if args.lm:
+        print("\n".join(lm_lines()))

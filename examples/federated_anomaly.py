@@ -5,14 +5,17 @@
 Four "edge nodes" each hold a private partition of normal data.  Each node
 trains a local DAEF and publishes ONLY the privacy-safe sufficient statistics
 (U·S factors + M vectors — sizes independent of the local sample count).
-The broker aggregation is compared against (a) each node alone and (b) the
-exact layer-synchronized federation, and against centralized training.
+Both federation flavours run through one `repro.engine.FederationSession`:
+the broker aggregation (``merge="pairwise"``, paper-as-written, approximate)
+and the exact layer-synchronized protocol (``merge="sequential"``), compared
+against each node alone and against centralized training.
 """
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import anomaly, daef, federated
 from repro.data import synthetic
+from repro.engine import DAEFEngine, ExecutionPlan
 
 
 def main() -> None:
@@ -21,19 +24,20 @@ def main() -> None:
     cfg = daef.DAEFConfig(
         layer_sizes=(9, 3, 5, 7, 9), lam_hidden=0.8, lam_last=0.9
     )
+    engine = DAEFEngine(cfg)
 
     # Partition across 4 nodes (non-iid-ish: contiguous slices).
     n = x_train.shape[1]
     parts = [jnp.asarray(x_train[:, i * n // 4 : (i + 1) * n // 4]) for i in range(4)]
 
     def f1_of(model) -> float:
-        errs = daef.reconstruction_error(cfg, model, jnp.asarray(x_test))
+        errs = engine.scores(model, jnp.asarray(x_test))
         return anomaly.evaluate(model.train_errors, errs, y_test, "extreme_iqr").f1
 
     print("== per-node local models ==")
     locals_ = []
     for i, p in enumerate(parts):
-        m = daef.fit(cfg, p)
+        m = engine.fit(p)
         locals_.append(m)
         print(f"node {i}: {p.shape[1]} samples -> F1 {f1_of(m):.3f}")
 
@@ -44,14 +48,16 @@ def main() -> None:
           f"V factors never leave the node (paper §5)")
 
     print("\n== broker aggregation (paper-as-written) ==")
+    # The already-trained local models merge knowledge-only — no refits.
     agg = locals_[0]
     for m in locals_[1:]:
-        agg = daef.merge_models(cfg, agg, m)
+        agg = engine.merge(agg, m)
     print(f"aggregated model F1: {f1_of(agg):.3f}")
 
     print("\n== layer-synchronized federation (exact) vs centralized ==")
-    fed = federated.federated_fit(cfg, parts)
-    cen = daef.fit(cfg, jnp.asarray(x_train))
+    sync = DAEFEngine(cfg, ExecutionPlan(merge="sequential")).session()
+    fed = sync.round(parts)
+    cen = engine.fit(jnp.asarray(x_train))
     print(f"federated F1: {f1_of(fed):.3f}   centralized F1: {f1_of(cen):.3f}")
     wd = max(float(jnp.abs(a - b).max()) for a, b in zip(fed.weights, cen.weights))
     print(f"max weight difference federated vs centralized: {wd:.2e}")

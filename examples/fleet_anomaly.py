@@ -1,4 +1,4 @@
-"""Fleet anomaly detection: 64 edge devices, one vmap dispatch.
+"""Fleet anomaly detection: 64 edge devices, one engine, two plans.
 
     PYTHONPATH=src python examples/fleet_anomaly.py             # vmap fleet
     PYTHONPATH=src python examples/fleet_anomaly.py --sharded   # + tenant mesh
@@ -6,17 +6,16 @@
 The "millions of users" shape of DAEF: many small per-tenant models instead
 of one big one.  32 sites each run 2 edge devices; every device trains a
 DAEF anomaly detector on its local share of the site's (normal-only)
-traffic.  All 64 devices train in a SINGLE jitted vmap call, then each
+traffic.  All 64 devices train in a SINGLE jitted dispatch, then each
 site's device pair is federated-merged (the paper's broker aggregation,
 batched) into 32 site models, which score the sites' test traffic in one
 more dispatch.
 
-``--sharded`` runs the same pipeline with the tenant axis sharded over a
-'tenants' device-mesh axis (``core/fleet_sharded``): training and scoring
-split 64/D tenants per device, and the site aggregation runs as the on-mesh
-tree reduction ``fleet_merge_tree`` (group_size = devices per site) instead
-of host-side pairwise slicing.  On a 1-device host it degenerates to the
-vmap path — same numbers, same code path as a pod.
+Everything goes through `repro.engine`: ``--sharded`` swaps the
+ExecutionPlan (mode="mesh", merge="tree" — tenants split over a 'tenants'
+device-mesh axis, site aggregation as the on-mesh shard_map tree reduction)
+without touching the pipeline code.  On a 1-device host the mesh plan
+degenerates to the vmap path — same numbers, same code path as a pod.
 """
 import argparse
 import time
@@ -25,8 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import anomaly, daef, fleet, fleet_sharded
+from repro.core import anomaly, daef
 from repro.data import synthetic
+from repro.engine import DAEFEngine, ExecutionPlan
 
 N_SITES = 32
 DEVICES_PER_SITE = 2  # -> 64 tenant models
@@ -52,28 +52,30 @@ def main(sharded: bool = False) -> None:
 
     cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9)
 
-    mesh = None
     if sharded:
         d = len(jax.devices())
         while d > 1 and (k % d or (k // d) % DEVICES_PER_SITE and DEVICES_PER_SITE % (k // d)):
             d //= 2
-        mesh = fleet_sharded.tenant_mesh(d)
+        plan = ExecutionPlan(mode="mesh", tenants=k, mesh_devices=d, merge="tree")
+    else:
+        plan = ExecutionPlan(mode="vmap", tenants=k, merge="pairwise")
+    engine = DAEFEngine(cfg, plan)
+    if engine.mesh is not None:
+        d = engine.mesh.shape["tenants"]
         print(f"tenant mesh: {d} device(s), {k // d} tenants per device")
 
     t0 = time.perf_counter()
-    if mesh is not None:
-        devices = fleet_sharded.sharded_fleet_fit(cfg, xs, mesh, seeds=jnp.asarray(seeds))
-    else:
-        devices = fleet.fleet_fit(cfg, xs, seeds=jnp.asarray(seeds))
+    devices = engine.fit(xs, seeds=jnp.asarray(seeds))
     jax.block_until_ready(devices.model.train_errors)
     print(f"trained {k} models in one dispatch: {time.perf_counter() - t0:.2f}s "
           f"(incl. one-time JIT)")
 
     t0 = time.perf_counter()
-    if mesh is not None:
-        sites = fleet_sharded.fleet_merge_tree(cfg, devices, DEVICES_PER_SITE, mesh=mesh)
-    else:
-        sites = fleet.fleet_merge_pairwise(cfg, devices)
+    # Federation: each site's device pair reduces into one logical model —
+    # host pairwise merges under the vmap plan, the on-mesh shard_map
+    # butterfly under the mesh plan.  Same engine spelling either way.
+    sites_engine = engine.for_tenants(N_SITES)
+    sites = engine.reduce(devices, DEVICES_PER_SITE)
     jax.block_until_ready(sites.model.train_errors)
     print(f"merged {k} -> {sites.size} site models in one dispatch: "
           f"{time.perf_counter() - t0:.2f}s")
@@ -81,12 +83,9 @@ def main(sharded: bool = False) -> None:
     # Score every site's test traffic in one padded dispatch.
     n_test = min(s[1].shape[1] for s in site_splits)
     xs_test = np.stack([s[1][:, :n_test] for s in site_splits]).astype(np.float32)
-    if mesh is not None and sites.size % mesh.shape[fleet_sharded.TENANT_AXIS] == 0:
-        scores = fleet_sharded.sharded_fleet_scores(cfg, sites, xs_test, mesh=mesh)
-    else:
-        scores = fleet.fleet_scores(cfg, sites, jnp.asarray(xs_test))
-    mus = fleet.fleet_thresholds(sites, rule="q90")
-    flags = fleet.fleet_classify(scores, mus)
+    scores = sites_engine.scores(sites, xs_test)
+    mus = sites_engine.thresholds(sites, rule="q90")
+    flags = sites_engine.classify(scores, mus)
 
     f1s = [
         anomaly.binary_metrics(flags[s], site_splits[s][2][:n_test]).f1

@@ -17,6 +17,7 @@ import numpy as np
 from repro.configs import registry
 from repro.core import anomaly, daef
 from repro.data import synthetic
+from repro.engine import DAEFEngine
 from repro.models import get_bundle, transformer
 
 
@@ -41,7 +42,8 @@ def main() -> None:
     head_cfg = daef.DAEFConfig(
         layer_sizes=(d, d // 8, d // 4, d), lam_hidden=0.1, lam_last=0.5
     )
-    model = daef.fit(head_cfg, jnp.asarray(feats), n_partitions=4)
+    engine = DAEFEngine(head_cfg)  # default plan: single model, one dispatch
+    model = engine.fit(jnp.asarray(feats), n_partitions=4)
     print(f"DAEF head fitted on {feats.shape[1]} pooled states, "
           f"latent dim {head_cfg.latent_dim}")
 
@@ -52,7 +54,7 @@ def main() -> None:
     def score(tokens):
         f = np.asarray(pooled_states(params, cfg, tokens)).T
         f = (f - mean) / std
-        return daef.reconstruction_error(head_cfg, model, jnp.asarray(f))
+        return engine.scores(model, jnp.asarray(f))
 
     errs = jnp.concatenate([score(test_norm), score(ood_tokens)])
     truth = np.concatenate([np.zeros(128), np.ones(128)])

@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Runs in a few seconds on CPU: builds a synthetic replica of the paper's
-"cardio" dataset, fits DAEF in ONE pass (no epochs), thresholds by IQR and
-reports F1 — the paper's core pipeline end to end.
+"cardio" dataset, fits DAEF in ONE pass (no epochs) through the unified
+`repro.engine` facade, thresholds by IQR and reports F1 — the paper's core
+pipeline end to end.  The same engine/plan spelling scales to vmapped
+fleets and device meshes (see examples/fleet_anomaly.py).
 """
 import time
 
@@ -12,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import anomaly, daef
 from repro.data import synthetic
+from repro.engine import DAEFEngine, ExecutionPlan
 
 
 def main() -> None:
@@ -25,15 +28,16 @@ def main() -> None:
         lam_last=0.9,
         init="xavier",
     )
-    daef.fit(cfg, jnp.asarray(x_train), n_partitions=4)  # warm-up (JIT)
+    engine = DAEFEngine(cfg, ExecutionPlan(mode="loop", tenants=1))
+    engine.fit(jnp.asarray(x_train), n_partitions=4)  # warm-up (JIT)
     t0 = time.perf_counter()
-    model = daef.fit(cfg, jnp.asarray(x_train), n_partitions=4)
+    model = engine.fit(jnp.asarray(x_train), n_partitions=4)
     jnp.asarray(model.train_errors).block_until_ready()
     print(f"DAEF trained non-iteratively in {time.perf_counter() - t0:.2f}s "
           f"({x_train.shape[1]} samples, {len(model.weights)} layers; "
           f"one-time JIT compile excluded)")
 
-    errs = daef.reconstruction_error(cfg, model, jnp.asarray(x_test))
+    errs = engine.scores(model, jnp.asarray(x_test))
     met = anomaly.evaluate(model.train_errors, errs, y_test, rule="q90")
     print(f"F1 {met.f1:.3f}  precision {met.precision:.3f}  "
           f"recall {met.recall:.3f}  (threshold rule: Q90)")

@@ -2,6 +2,9 @@
 production-grade multi-pod JAX framework.
 
 Layers:
+  repro.engine    — THE client-facing API: DAEFEngine + declarative
+                    ExecutionPlan + FederationSession over every execution
+                    path (loop / vmap / tenant-mesh / data-mesh / federated)
   repro.core      — the paper: ROLANN/DSVD/ELM-AE non-iterative training,
                     federated aggregation, anomaly detection
   repro.models    — the assigned architecture zoo (6 families, 10 configs)

@@ -12,6 +12,17 @@ Public API:
   fleet        — multi-tenant engine: K models per vmap dispatch
   fleet_sharded— fleet with the tenant axis sharded over a device mesh,
                  incl. the cross-device tree-reduce federation
+
+The unified engine (``repro.engine``): client code should not pick between
+these execution paths by importing different modules — construct a
+``DAEFEngine`` from a ``DAEFConfig`` plus a declarative ``ExecutionPlan``
+(mode="loop"|"vmap"|"mesh", tenants=K, mesh_axes/mesh_devices,
+stats_backend, merge="sequential"|"pairwise"|"tree") and use one spelling
+of ``fit / partial_fit / predict / scores / merge / reduce / save / load``
+plus the round-based ``FederationSession``.  The engine dispatches to the
+modules above; the old module-level fit entry points (``fleet.fleet_fit``,
+``fleet_sharded.sharded_fleet_fit``, ``federated.federated_fit``,
+``sharded.fit_on_mesh``) remain as thin deprecation shims over it.
 """
 from repro.core import (  # noqa: F401
     activations,

@@ -86,7 +86,26 @@ def train_locally_and_aggregate(
 def federated_fit(
     config: daef.DAEFConfig, partitions: Sequence[Array]
 ) -> daef.DAEFModel:
-    """Layer-synchronized federation — exact centralized equivalence.
+    """DEPRECATED — use ``DAEFEngine(config, ExecutionPlan(
+    merge="sequential")).session().round(partitions)`` (`repro.engine`).
+    Thin shim, identical behavior."""
+    from repro import engine as _engine
+
+    _engine.deprecation.warn_once(
+        "federated.federated_fit",
+        "DAEFEngine(config, ExecutionPlan(merge='sequential'))"
+        ".session().round(partitions)",
+    )
+    eng = _engine.DAEFEngine(config, _engine.ExecutionPlan(merge="sequential"))
+    return eng.session().round(partitions)
+
+
+def _federated_fit(
+    config: daef.DAEFConfig, partitions: Sequence[Array]
+) -> daef.DAEFModel:
+    """Layer-synchronized federation — exact centralized equivalence (the
+    engine's FederationSession merge="sequential" path; `federated_fit` is
+    its deprecation shim).
 
     Communication per round: encoder factors (or Grams) once, then one
     ROLANN knowledge aggregate per decoder layer.

@@ -118,7 +118,7 @@ def _fleet_merge(config, model_a, model_b, seeds, lam_hidden, lam_last):
 # Public API
 # ---------------------------------------------------------------------------
 
-def fleet_fit(
+def _fit_fleet(
     config: daef.DAEFConfig,
     xs: Array,
     *,
@@ -127,7 +127,8 @@ def fleet_fit(
     lam_last=None,
     n_partitions: int = 1,
 ) -> DAEFFleet:
-    """Train K independent DAEF models in one jitted vmap call.
+    """Train K independent DAEF models in one jitted vmap call (the engine's
+    mode="vmap" fit path; `fleet_fit` is its deprecation shim).
 
     xs: [K, m0, n] — tenant k trains on xs[k].
     seeds / lam_hidden / lam_last: scalar (shared) or [K] (per tenant);
@@ -142,6 +143,35 @@ def fleet_fit(
     )
     return DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
                      lam_last=lam_last)
+
+
+def fleet_fit(
+    config: daef.DAEFConfig,
+    xs: Array,
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+    n_partitions: int = 1,
+) -> DAEFFleet:
+    """DEPRECATED — use ``DAEFEngine(config, ExecutionPlan(mode="vmap",
+    tenants=K)).fit(xs, ...)`` (`repro.engine`).  Thin shim, identical
+    behavior."""
+    from repro import engine as _engine
+
+    _engine.deprecation.warn_once(
+        "fleet.fleet_fit", "DAEFEngine(config, ExecutionPlan(mode='vmap', "
+        "tenants=K)).fit(xs, ...)"
+    )
+    if getattr(xs, "ndim", None) != 3:
+        raise ValueError(
+            f"fleet data must be [K, m0, n], got {getattr(xs, 'shape', None)}"
+        )
+    eng = _engine.DAEFEngine(
+        config, _engine.ExecutionPlan(mode="vmap", tenants=int(xs.shape[0]))
+    )
+    return eng.fit(xs, seeds=seeds, lam_hidden=lam_hidden, lam_last=lam_last,
+                   n_partitions=n_partitions)
 
 
 def fleet_predict(config: daef.DAEFConfig, fleet: DAEFFleet, xs: Array) -> Array:
@@ -188,13 +218,13 @@ def _require_concrete(
             )
 
 
-def fleet_merge(config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet) -> DAEFFleet:
-    """Pairwise-federated aggregation: tenant k of ``a`` merges with tenant k
-    of ``b`` (both must have been trained with the same per-tenant seed —
-    the paper's shared-randomness requirement)."""
+def _check_merge_compat(a: DAEFFleet, b: DAEFFleet, op: str) -> None:
+    """Host-side merge-compatibility validation shared by `fleet_merge` and
+    the engine's loop-mode merge: equal sizes, shared per-tenant seeds (the
+    paper's stage-1 randomness requirement) and matching lambdas."""
     if a.size != b.size:
         raise ValueError(f"fleet sizes differ: {a.size} != {b.size}")
-    _require_concrete((a, b), "fleet_merge")
+    _require_concrete((a, b), op)
     if not jnp.array_equal(a.seeds, b.seeds):
         raise ValueError(
             "cannot merge fleets trained with different per-tenant seeds: "
@@ -204,6 +234,13 @@ def fleet_merge(config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet) -> DAEFFlee
     if not (jnp.allclose(a.lam_hidden, b.lam_hidden)
             and jnp.allclose(a.lam_last, b.lam_last)):
         raise ValueError("cannot merge fleets with different per-tenant lambdas")
+
+
+def fleet_merge(config: daef.DAEFConfig, a: DAEFFleet, b: DAEFFleet) -> DAEFFleet:
+    """Pairwise-federated aggregation: tenant k of ``a`` merges with tenant k
+    of ``b`` (both must have been trained with the same per-tenant seed —
+    the paper's shared-randomness requirement)."""
+    _check_merge_compat(a, b, "fleet_merge")
     return fleet_merge_unchecked(config, a, b)
 
 
@@ -226,7 +263,7 @@ def fleet_partial_fit(
 ) -> DAEFFleet:
     """Incremental learning for every tenant at once: fit the new blocks
     (same seeds, so the stage-1 randomness lines up) and merge."""
-    update = fleet_fit(
+    update = _fit_fleet(
         config, xs_new, seeds=fleet.seeds, lam_hidden=fleet.lam_hidden,
         lam_last=fleet.lam_last,
     )

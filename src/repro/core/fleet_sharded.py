@@ -109,7 +109,7 @@ def shard_batch(xs, mesh: Mesh) -> Array:
 # Sharded fit / scores / partial_fit — placement + the existing vmap kernels
 # ---------------------------------------------------------------------------
 
-def sharded_fleet_fit(
+def _fit_sharded(
     config: daef.DAEFConfig,
     xs,
     mesh: Mesh,
@@ -119,7 +119,9 @@ def sharded_fleet_fit(
     lam_last=None,
     n_partitions: int = 1,
 ) -> fleet.DAEFFleet:
-    """`fleet.fleet_fit` with the tenant axis sharded over ``mesh``.
+    """The vmapped fleet fit with the tenant axis sharded over ``mesh`` —
+    the engine's mode="mesh" fit path (`sharded_fleet_fit` is its
+    deprecation shim).
 
     The vmap-batched fit kernel has no cross-tenant data flow, so XLA
     compiles it into independent per-shard programs; the returned fleet's
@@ -139,6 +141,38 @@ def sharded_fleet_fit(
     )
     return fleet.DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
                            lam_last=lam_last)
+
+
+def sharded_fleet_fit(
+    config: daef.DAEFConfig,
+    xs,
+    mesh: Mesh,
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+    n_partitions: int = 1,
+) -> fleet.DAEFFleet:
+    """DEPRECATED — use ``DAEFEngine(config, ExecutionPlan(mode="mesh",
+    tenants=K), mesh=mesh).fit(xs, ...)`` (`repro.engine`).  Thin shim,
+    identical behavior."""
+    from repro import engine as _engine
+
+    _engine.deprecation.warn_once(
+        "fleet_sharded.sharded_fleet_fit",
+        "DAEFEngine(config, ExecutionPlan(mode='mesh', tenants=K), "
+        "mesh=mesh).fit(xs, ...)",
+    )
+    if getattr(xs, "ndim", None) != 3:
+        raise ValueError(
+            f"fleet data must be [K, m0, n], got {getattr(xs, 'shape', None)}"
+        )
+    eng = _engine.DAEFEngine(
+        config, _engine.ExecutionPlan(mode="mesh", tenants=int(xs.shape[0])),
+        mesh=mesh,
+    )
+    return eng.fit(xs, seeds=seeds, lam_hidden=lam_hidden, lam_last=lam_last,
+                   n_partitions=n_partitions)
 
 
 def sharded_fleet_scores(

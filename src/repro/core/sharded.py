@@ -78,7 +78,38 @@ def fit_on_mesh(
     data_axes: Sequence[str] = ("data",),
     local_factorization: str = "gram_eigh",
 ) -> daef.DAEFModel:
-    """Fit DAEF with the sample axis sharded over ``data_axes`` of ``mesh``.
+    """DEPRECATED — use ``DAEFEngine(config, ExecutionPlan(mode="mesh",
+    mesh_axes=data_axes, local_factorization=...), mesh=mesh).fit(x)``
+    (`repro.engine`).  Thin shim, identical behavior."""
+    from repro import engine as _engine
+
+    _engine.deprecation.warn_once(
+        "sharded.fit_on_mesh",
+        "DAEFEngine(config, ExecutionPlan(mode='mesh', mesh_axes=data_axes), "
+        "mesh=mesh).fit(x)",
+    )
+    eng = _engine.DAEFEngine(
+        config,
+        _engine.ExecutionPlan(
+            mode="mesh", mesh_axes=tuple(data_axes),
+            local_factorization=local_factorization,
+        ),
+        mesh=mesh,
+    )
+    return eng.fit(x)
+
+
+def _fit_on_mesh(
+    config: daef.DAEFConfig,
+    x: Array,
+    mesh: Mesh,
+    *,
+    data_axes: Sequence[str] = ("data",),
+    local_factorization: str = "gram_eigh",
+) -> daef.DAEFModel:
+    """Fit DAEF with the sample axis sharded over ``data_axes`` of ``mesh``
+    (the engine's data-sharded mode="mesh" path; `fit_on_mesh` is its
+    deprecation shim).
 
     x: [m0, n]; n must divide evenly over the product of the data axes.
     Returns a DAEFModel whose weights are replicated and whose train_errors

@@ -26,8 +26,10 @@ cache key — the env var can never bake a stale backend into a cached trace.
 """
 from __future__ import annotations
 
+import functools
 import os
 
+import jax
 import jax.numpy as jnp
 
 BACKENDS = ("einsum", "fused")
@@ -49,16 +51,7 @@ def resolve(backend: str | None = None) -> str:
     return backend
 
 
-def gram_stats(
-    xa: Array, fsq: Array, fd: Array, *, backend: str | None = None
-) -> tuple[Array, Array]:
-    """(G, M) per-output statistics for xa [m, n], fsq/fd [o, n].
-
-    Both backends accumulate in float32 on the contraction and return the
-    promoted input dtype, so they agree within accumulation-order error
-    (tests/test_stats_backend.py pins the tolerances).
-    """
-    backend = resolve(backend)
+def _gram_stats_unbatched(xa: Array, fsq: Array, fd: Array, backend: str):
     if backend == "fused":
         from repro.kernels.rolann_stats import rolann_stats
 
@@ -68,15 +61,60 @@ def gram_stats(
     return g, m
 
 
+@functools.lru_cache(maxsize=None)
+def _gram_stats_fn(backend: str):
+    """The per-call ``gram_stats`` body with a custom batching rule: under
+    ``vmap`` (the fleet engine's tenant axis) the whole call collapses into
+    ONE tenant-batched dispatch — for the fused backend that is a single
+    3-D-grid kernel launch (``rolann_stats_batched``) instead of Pallas'
+    generic per-tenant batching rule, and for einsum a single ``k``-batched
+    contraction."""
+
+    @jax.custom_batching.custom_vmap
+    def f(xa, fsq, fd):
+        return _gram_stats_unbatched(xa, fsq, fd, backend)
+
+    @f.def_vmap
+    def _batched_rule(axis_size, in_batched, xa, fsq, fd):  # noqa: ARG001
+        def lift(arg, batched):
+            return arg if batched else jnp.broadcast_to(
+                arg[None], (axis_size, *arg.shape)
+            )
+
+        xa = lift(xa, in_batched[0])
+        fsq = lift(fsq, in_batched[1])
+        fd = lift(fd, in_batched[2])
+        return gram_stats_batched(xa, fsq, fd, backend=backend), (True, True)
+
+    return f
+
+
+def gram_stats(
+    xa: Array, fsq: Array, fd: Array, *, backend: str | None = None
+) -> tuple[Array, Array]:
+    """(G, M) per-output statistics for xa [m, n], fsq/fd [o, n].
+
+    Both backends accumulate in float32 on the contraction and return the
+    promoted input dtype, so they agree within accumulation-order error
+    (tests/test_stats_backend.py pins the tolerances).
+
+    Vmapping this function (the fleet engine does, over the tenant axis)
+    dispatches to :func:`gram_stats_batched` via a ``custom_vmap`` rule, so
+    a whole tenant batch is one batched-stats call — not K per-tenant calls
+    batched generically.
+    """
+    return _gram_stats_fn(resolve(backend))(xa, fsq, fd)
+
+
 def gram_stats_batched(
     xa: Array, fsq: Array, fd: Array, *, backend: str | None = None
 ) -> tuple[Array, Array]:
     """Tenant-batched (G, M): xa [k, m, n], fsq/fd [k, o, n].
 
-    The fused path is a single batched kernel launch (grid over (k, o)),
-    not k separate dispatches.  Not yet on the fleet engine's hot path —
-    `fleet._fleet_fit` vmaps the unbatched `gram_stats` (Pallas supplies
-    the batching rule); wiring this variant under it is a ROADMAP item.
+    The fused path is a single batched kernel launch (grid over (k, o,
+    n_tiles)), not k separate dispatches.  This IS the fleet engine's hot
+    path: ``gram_stats`` carries a ``custom_vmap`` rule that lowers the
+    vmapped per-tenant call in ``fleet._fleet_fit`` to this variant.
     """
     backend = resolve(backend)
     if backend == "fused":

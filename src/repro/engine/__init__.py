@@ -1,0 +1,35 @@
+"""repro.engine — ONE client-facing API for every DAEF execution path.
+
+The repo grew five call surfaces for the paper's one closed-form math
+(`daef.fit`, `fleet.fleet_fit`, `fleet_sharded.sharded_fleet_fit`,
+`sharded.fit_on_mesh`, `federated.federated_fit`).  This package collapses
+them behind a facade:
+
+    from repro.engine import DAEFEngine, ExecutionPlan
+
+    engine = DAEFEngine(config, ExecutionPlan(mode="mesh", tenants=64,
+                                              merge="tree"))
+    fl      = engine.fit(xs)                    # [K, features, samples]
+    scores  = engine.scores(fl, batch, n_valid=counts)
+    sites   = engine.reduce(fl, group_size=2)   # federation, per plan.merge
+    session = engine.session()                  # round-based federation
+    model   = session.round(parts)
+
+Placement is configuration (`ExecutionPlan`), not imports; the engine
+resolves env/config precedence once, builds and caches the device mesh, and
+dispatches to the existing loop/vmap/mesh/federated kernels — which all
+remain importable, with the old module-level fit entry points kept as thin
+deprecation shims over this API.
+"""
+from repro.engine import deprecation  # noqa: F401
+from repro.engine.engine import DAEFEngine, EngineState  # noqa: F401
+from repro.engine.plan import ExecutionPlan, PlanError  # noqa: F401
+from repro.engine.session import FederationSession  # noqa: F401
+
+__all__ = [
+    "DAEFEngine",
+    "EngineState",
+    "ExecutionPlan",
+    "FederationSession",
+    "PlanError",
+]

@@ -1,0 +1,28 @@
+"""Single-shot DeprecationWarnings for the pre-engine entry points.
+
+The module-level fit spellings (`fleet.fleet_fit`,
+`fleet_sharded.sharded_fleet_fit`, `federated.federated_fit`,
+`sharded.fit_on_mesh`) are kept as thin shims over `repro.engine` —
+behaviorally identical (the parity suites run against them unchanged), but
+each warns exactly once per process so migrating callers see one line, not
+one per dispatch.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(old: str, new: str) -> None:
+    """Emit a single DeprecationWarning for ``old`` per process."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated: construct a repro.engine.DAEFEngine and use "
+        f"{new} instead (placement is an ExecutionPlan field, not a module "
+        "choice)",
+        DeprecationWarning,
+        stacklevel=3,
+    )

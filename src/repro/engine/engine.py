@@ -1,0 +1,564 @@
+"""DAEFEngine — one client-facing API over every DAEF execution path.
+
+The engine binds a ``DAEFConfig`` (the math: layer sizes, lambdas, knowledge
+representation) to an ``ExecutionPlan`` (the placement: loop / vmap / mesh,
+tenant count, merge strategy, stats backend) and exposes ONE spelling of
+
+    fit / partial_fit / predict / scores / merge / reduce /
+    thresholds / classify / save / load / session
+
+Internally it dispatches to the existing kernels — the eager single-model
+core (`core.daef`), the vmapped fleet kernels (`core.fleet`), the
+tenant-sharded fleet (`core.fleet_sharded`) and the data-sharded single
+model (`core.sharded`) — resolving env/config precedence exactly once at
+construction and building/caching the device mesh on first use, so client
+code selects placement by configuration, never by importing a different
+module.
+
+State convention: with a 3-D ``[K, features, samples]`` batch the engine
+works on a ``DAEFFleet`` (every method takes/returns fleets); with a 2-D
+``[features, samples]`` matrix it works on a single ``DAEFModel``.  The two
+agree bit-for-bit with the direct module-level calls they subsume
+(tests/test_engine.py property-checks every mode at the test_parity
+tolerances).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anomaly, daef, dsvd, fleet, fleet_sharded, rolann, sharded
+from repro.engine.plan import ExecutionPlan, PlanError
+
+Array = jnp.ndarray
+
+EngineState = daef.DAEFModel | fleet.DAEFFleet
+
+
+class DAEFEngine:
+    """Unified DAEF training/serving engine (see module docstring).
+
+    >>> engine = DAEFEngine(config, ExecutionPlan(mode="vmap", tenants=64))
+    >>> fl = engine.fit(xs)                       # xs [64, m0, n]
+    >>> scores = engine.scores(fl, batch, n_valid=counts)
+    >>> sites = engine.reduce(fl, group_size=2)   # per plan.merge
+    """
+
+    def __init__(
+        self,
+        config: daef.DAEFConfig,
+        plan: ExecutionPlan | None = None,
+        *,
+        mesh=None,
+    ):
+        plan = plan if plan is not None else ExecutionPlan()
+        if not isinstance(plan, ExecutionPlan):
+            raise PlanError(
+                f"plan must be an ExecutionPlan, got {type(plan).__name__}"
+            )
+        # stats-backend precedence, resolved ONCE: plan.stats_backend >
+        # config.stats_backend > $REPRO_STATS_BACKEND > default.  The
+        # resolved config keys every jit cache downstream.
+        if plan.stats_backend is not None:
+            config = dataclasses.replace(config, stats_backend=plan.stats_backend)
+        config = config.resolved()
+        plan = dataclasses.replace(plan, stats_backend=config.stats_backend)
+        self.config = config
+        self.plan = plan
+        self._mesh = None
+        if mesh is not None:
+            self._check_mesh(mesh)
+            self._mesh = mesh
+        elif plan.mode == "mesh" and plan.mesh_devices is not None:
+            self.mesh  # build eagerly: surface bad mesh sizes at init
+
+    # ------------------------------------------------------------------
+    # Mesh
+    # ------------------------------------------------------------------
+
+    def _check_mesh(self, mesh) -> None:
+        if self.plan.mode != "mesh":
+            raise PlanError(
+                f"an explicit mesh was given but plan.mode={self.plan.mode!r}; "
+                "use ExecutionPlan(mode='mesh', ...)"
+            )
+        missing = [a for a in self.plan.mesh_axes if a not in mesh.shape]
+        if missing:
+            raise PlanError(
+                f"mesh {dict(mesh.shape)} has no axis {missing} required by "
+                f"plan.mesh_axes={self.plan.mesh_axes}"
+            )
+        if self.plan.tenant_sharded:
+            d = mesh.shape[fleet_sharded.TENANT_AXIS]
+            if self.plan.tenants % d:
+                raise PlanError(
+                    f"bad mesh size: tenants={self.plan.tenants} does not "
+                    f"divide evenly over the {d}-device "
+                    f"'{fleet_sharded.TENANT_AXIS}' axis — pad the fleet or "
+                    "resize the mesh"
+                )
+
+    @property
+    def mesh(self):
+        """The device mesh this plan runs on (built once, then cached).
+        None for loop/vmap plans."""
+        if self.plan.mode != "mesh":
+            return None
+        if self._mesh is None:
+            self._mesh = self._build_mesh()
+        return self._mesh
+
+    def _build_mesh(self):
+        plan = self.plan
+        avail = len(jax.devices())
+        if plan.tenant_sharded:
+            d = plan.mesh_devices
+            if d is None:
+                d = min(avail, plan.tenants)
+                while d > 1 and plan.tenants % d:
+                    d -= 1
+            if d > avail:
+                raise PlanError(
+                    f"bad mesh size: mesh_devices={d} exceeds the {avail} "
+                    "available device(s) — shrink the plan or run on more "
+                    "devices"
+                )
+            return fleet_sharded.tenant_mesh(d)
+        if len(plan.mesh_axes) != 1:
+            raise PlanError(
+                f"cannot auto-build a mesh for axes {plan.mesh_axes}; pass "
+                "mesh= explicitly (e.g. launch.mesh.make_production_mesh())"
+            )
+        from repro import compat
+
+        n = plan.mesh_devices or avail
+        if n > avail:
+            raise PlanError(
+                f"bad mesh size: mesh_devices={n} exceeds the {avail} "
+                "available device(s)"
+            )
+        return compat.make_mesh((n,), plan.mesh_axes)
+
+    # ------------------------------------------------------------------
+    # Input handling
+    # ------------------------------------------------------------------
+
+    def _check_x(self, x, *, what: str) -> bool:
+        """Validate a data batch; True when it is a [K, m, n] fleet batch."""
+        ndim = getattr(x, "ndim", None)
+        m0 = self.config.layer_sizes[0]
+        if ndim == 3:
+            k = x.shape[0]
+            if k != self.plan.tenants:
+                raise PlanError(
+                    f"{what}: batch has {k} tenants but the plan declares "
+                    f"tenants={self.plan.tenants} — reshape the batch or "
+                    "re-plan"
+                )
+            if x.shape[1] != m0:
+                raise PlanError(
+                    f"{what}: feature dim {x.shape[1]} != layer_sizes[0] {m0}"
+                )
+            if self.plan.data_sharded:
+                raise PlanError(
+                    f"{what}: plan shards the sample axis of a single model "
+                    f"(mesh_axes={self.plan.mesh_axes}) but got a 3-D tenant "
+                    "batch; use mesh_axes=('tenants',) for fleets"
+                )
+            return True
+        if ndim == 2:
+            if self.plan.tenants != 1:
+                raise PlanError(
+                    f"{what}: got a single [features, samples] matrix but the "
+                    f"plan declares tenants={self.plan.tenants}; stack the "
+                    "per-tenant data to [K, features, samples]"
+                )
+            if x.shape[0] != m0:
+                raise PlanError(
+                    f"{what}: feature dim {x.shape[0]} != layer_sizes[0] {m0}"
+                )
+            return False
+        raise PlanError(
+            f"{what}: expected [features, samples] or [K, features, samples], "
+            f"got shape {getattr(x, 'shape', None)}"
+        )
+
+    def _is_fleet(self, state: EngineState, *, what: str) -> bool:
+        if isinstance(state, fleet.DAEFFleet):
+            if state.size != self.plan.tenants:
+                raise PlanError(
+                    f"{what}: fleet has {state.size} tenants but the plan "
+                    f"declares tenants={self.plan.tenants}"
+                )
+            return True
+        if isinstance(state, daef.DAEFModel):
+            if self.plan.tenants != 1:
+                raise PlanError(
+                    f"{what}: got a single DAEFModel but the plan declares "
+                    f"tenants={self.plan.tenants}"
+                )
+            return False
+        raise PlanError(
+            f"{what}: expected a DAEFModel or DAEFFleet, got "
+            f"{type(state).__name__}"
+        )
+
+    # ------------------------------------------------------------------
+    # fit / partial_fit
+    # ------------------------------------------------------------------
+
+    def fit(
+        self,
+        x,
+        *,
+        seeds=None,
+        lam_hidden=None,
+        lam_last=None,
+        n_partitions: int = 1,
+    ) -> EngineState:
+        """Train under the plan.  ``x`` is [K, features, samples] for a fleet
+        (K == plan.tenants) or [features, samples] for a single model.
+
+        ``seeds`` / ``lam_hidden`` / ``lam_last`` are scalar-or-[K]
+        per-tenant overrides (fleet only); ``n_partitions`` splits samples to
+        exercise the distributed SVD/merge path (loop + vmap modes)."""
+        cfg, plan = self.config, self.plan
+        if not self._check_x(x, what="fit"):
+            if seeds is not None or lam_hidden is not None or lam_last is not None:
+                raise PlanError(
+                    "fit: per-tenant seeds/lambdas apply to fleet batches; "
+                    "for a single model set them on the DAEFConfig"
+                )
+            if plan.data_sharded:
+                return sharded._fit_on_mesh(
+                    cfg, x, self.mesh, data_axes=plan.mesh_axes,
+                    local_factorization=plan.local_factorization,
+                )
+            return daef.fit(cfg, x, n_partitions=n_partitions)
+
+        if plan.mode == "loop":
+            seeds, lam_hidden, lam_last = fleet._prepare_fit(
+                cfg, x, seeds, lam_hidden, lam_last
+            )
+            models = [
+                daef.fit(
+                    self._tenant_cfg(seeds, lam_hidden, lam_last, i),
+                    x[i], n_partitions=n_partitions,
+                )
+                for i in range(plan.tenants)
+            ]
+            return fleet.fleet_from_models(
+                cfg, models, seeds=seeds, lam_hidden=lam_hidden,
+                lam_last=lam_last,
+            )
+        if plan.mode == "vmap":
+            return fleet._fit_fleet(
+                cfg, x, seeds=seeds, lam_hidden=lam_hidden, lam_last=lam_last,
+                n_partitions=n_partitions,
+            )
+        return fleet_sharded._fit_sharded(
+            cfg, x, self.mesh, seeds=seeds, lam_hidden=lam_hidden,
+            lam_last=lam_last, n_partitions=n_partitions,
+        )
+
+    def partial_fit(self, state: EngineState, x_new) -> EngineState:
+        """Incremental learning: absorb a new data block (per tenant)."""
+        cfg, plan = self.config, self.plan
+        if not self._is_fleet(state, what="partial_fit"):
+            self._check_x(x_new, what="partial_fit")
+            if plan.data_sharded:
+                update = sharded._fit_on_mesh(
+                    cfg, x_new, self.mesh, data_axes=plan.mesh_axes,
+                    local_factorization=plan.local_factorization,
+                )
+                return daef.merge_models(cfg, state, update)
+            return daef.partial_fit(cfg, state, x_new)
+        self._check_x(x_new, what="partial_fit")
+        if plan.mode == "loop":
+            models = [
+                daef.partial_fit(
+                    self._tenant_cfg(
+                        state.seeds, state.lam_hidden, state.lam_last, i
+                    ),
+                    fleet.get_model(state, i), x_new[i],
+                )
+                for i in range(plan.tenants)
+            ]
+            return fleet.fleet_from_models(
+                cfg, models, seeds=state.seeds, lam_hidden=state.lam_hidden,
+                lam_last=state.lam_last,
+            )
+        if plan.mode == "vmap":
+            update = fleet._fit_fleet(
+                cfg, x_new, seeds=state.seeds, lam_hidden=state.lam_hidden,
+                lam_last=state.lam_last,
+            )
+            return fleet.fleet_merge(cfg, state, update)
+        return fleet_sharded.sharded_fleet_partial_fit(
+            cfg, state, x_new, mesh=self.mesh
+        )
+
+    def _tenant_cfg(self, seeds, lam_hidden, lam_last, i: int) -> daef.DAEFConfig:
+        return dataclasses.replace(
+            self.config,
+            seed=int(np.asarray(seeds)[i]),
+            lam_hidden=float(np.asarray(lam_hidden)[i]),
+            lam_last=float(np.asarray(lam_last)[i]),
+        )
+
+    # ------------------------------------------------------------------
+    # predict / scores
+    # ------------------------------------------------------------------
+
+    def predict(self, state: EngineState, x) -> Array:
+        """Reconstruct ``x`` ([K, m, n] per-tenant, or [m, n] single)."""
+        cfg, plan = self.config, self.plan
+        if not self._is_fleet(state, what="predict"):
+            self._check_x(x, what="predict")
+            if plan.data_sharded:
+                return sharded.predict_on_mesh(
+                    cfg, state, x, self.mesh, data_axes=plan.mesh_axes
+                )
+            return daef.predict(cfg, state, x)
+        self._check_x(x, what="predict")
+        if plan.mode == "loop":
+            return jnp.stack([
+                daef.predict(cfg, fleet.get_model(state, i), x[i])
+                for i in range(plan.tenants)
+            ])
+        if plan.mode == "vmap":
+            return fleet.fleet_predict(cfg, state, x)
+        return fleet_sharded.sharded_fleet_predict(cfg, state, x, mesh=self.mesh)
+
+    def scores(self, state: EngineState, x, n_valid=None) -> Array:
+        """Per-sample anomaly scores (reconstruction MSE): [K, n] or [n].
+
+        ``n_valid`` ([K] ints, fleet only) masks a padded serving batch:
+        scores of padding columns come back NaN."""
+        cfg, plan = self.config, self.plan
+        if not self._is_fleet(state, what="scores"):
+            if n_valid is not None:
+                raise PlanError(
+                    "scores: n_valid masks padded FLEET batches; a single "
+                    "model takes an unpadded [features, samples] matrix"
+                )
+            self._check_x(x, what="scores")
+            if plan.data_sharded:
+                recon = sharded.predict_on_mesh(
+                    cfg, state, x, self.mesh, data_axes=plan.mesh_axes
+                )
+                return jnp.mean((recon - x) ** 2, axis=0)
+            return daef.reconstruction_error(cfg, state, x)
+        self._check_x(x, what="scores")
+        if plan.mode == "loop":
+            errs = jnp.stack([
+                daef.reconstruction_error(cfg, fleet.get_model(state, i), x[i])
+                for i in range(plan.tenants)
+            ])
+            if n_valid is None:
+                return errs
+            mask = (jnp.arange(x.shape[-1])[None, :]
+                    < jnp.asarray(n_valid)[:, None])
+            return jnp.where(mask, errs, jnp.nan)
+        if plan.mode == "vmap":
+            return fleet.fleet_scores(cfg, state, x, n_valid=n_valid)
+        return fleet_sharded.sharded_fleet_scores(
+            cfg, state, x, n_valid=n_valid, mesh=self.mesh
+        )
+
+    def thresholds(self, state: EngineState, rule: str = "extreme_iqr") -> Array:
+        """Per-tenant anomaly thresholds from each model's train errors."""
+        if self._is_fleet(state, what="thresholds"):
+            return fleet.fleet_thresholds(state, rule=rule)
+        return anomaly.threshold(state.train_errors, rule)
+
+    def classify(self, scores: Array, thresholds: Array) -> Array:
+        """Flag anomalies (1 = anomalous); NaN padding scores classify 0."""
+        scores = jnp.asarray(scores)
+        if scores.ndim == 2:
+            return fleet.fleet_classify(scores, jnp.asarray(thresholds))
+        return anomaly.classify(scores, thresholds)
+
+    # ------------------------------------------------------------------
+    # Federation: merge / reduce / session
+    # ------------------------------------------------------------------
+
+    def merge(self, a: EngineState, b: EngineState) -> EngineState:
+        """Federated aggregation of two states trained with shared seeds
+        (tenant k of ``a`` with tenant k of ``b``)."""
+        a_fleet = self._is_fleet(a, what="merge")
+        b_fleet = self._is_fleet(b, what="merge")
+        if a_fleet != b_fleet:
+            raise PlanError(
+                "merge: cannot mix a DAEFModel with a DAEFFleet — wrap the "
+                "single model in a 1-tenant fleet (fleet.fleet_from_models) "
+                "or extract the tenant (engine.get_model)"
+            )
+        if not a_fleet:
+            return daef.merge_models(self.config, a, b)
+        if self.plan.mode == "loop":
+            fleet._check_merge_compat(a, b, "merge")
+            models = [
+                daef.merge_models(
+                    self._tenant_cfg(a.seeds, a.lam_hidden, a.lam_last, i),
+                    fleet.get_model(a, i), fleet.get_model(b, i),
+                )
+                for i in range(self.plan.tenants)
+            ]
+            return fleet.fleet_from_models(
+                self.config, models, seeds=a.seeds, lam_hidden=a.lam_hidden,
+                lam_last=a.lam_last,
+            )
+        return fleet.fleet_merge(self.config, a, b)
+
+    def reduce(self, state: fleet.DAEFFleet, group_size: int) -> fleet.DAEFFleet:
+        """Federate adjacent groups of ``group_size`` tenants into one model
+        each (K -> K/group_size), using the plan's ``merge`` strategy:
+
+        * "sequential" — host left-to-right ``daef.merge_models`` reduce;
+        * "pairwise"   — log2(group_size) rounds of vmapped pairwise merges;
+        * "tree"       — the on-mesh shard_map butterfly (`fleet_merge_tree`).
+
+        All three agree up to float error; tenants within a group must share
+        a seed (the paper's shared-randomness requirement)."""
+        if not self._is_fleet(state, what="reduce"):
+            raise PlanError("reduce: a single model has nothing to reduce")
+        k, merge = state.size, self.plan.merge
+        if group_size < 1 or k % group_size:
+            raise PlanError(
+                f"reduce: group_size {group_size} must divide the fleet "
+                f"size {k}"
+            )
+        if merge in ("pairwise", "tree") and (group_size & (group_size - 1)):
+            raise PlanError(
+                f"reduce: merge={merge!r} needs a power-of-two group_size "
+                f"(got {group_size}) — use merge='sequential' for arbitrary "
+                "group sizes"
+            )
+        if group_size == 1:
+            return state
+        if merge == "tree":
+            return fleet_sharded.fleet_merge_tree(
+                self.config, state, group_size,
+                mesh=self.mesh if self.plan.tenant_sharded else None,
+            )
+        fleet_sharded._validate_groups(state, group_size)
+        if merge == "pairwise":
+            while group_size > 1:
+                state = fleet.fleet_merge_pairwise(self.config, state)
+                group_size //= 2
+            return state
+        # sequential: exact left-to-right reduction per group, on host
+        models = []
+        for g in range(k // group_size):
+            cfg_g = self._tenant_cfg(
+                state.seeds, state.lam_hidden, state.lam_last, g * group_size
+            )
+            merged = fleet.get_model(state, g * group_size)
+            for j in range(1, group_size):
+                merged = daef.merge_models(
+                    cfg_g, merged, fleet.get_model(state, g * group_size + j)
+                )
+            models.append(merged)
+        stride = slice(None, None, group_size)
+        return fleet.fleet_from_models(
+            self.config, models, seeds=state.seeds[stride],
+            lam_hidden=state.lam_hidden[stride],
+            lam_last=state.lam_last[stride],
+        )
+
+    def for_tenants(self, tenants: int) -> "DAEFEngine":
+        """A derived engine for a different fleet size — same config, same
+        mode/merge/backend.  The natural follow-up to ``reduce``: the
+        K/group_size result fleet is served by ``engine.for_tenants(K //
+        group_size)``.  Mesh plans keep their device count when it still
+        divides the new tenant count and fall back to auto-sizing
+        otherwise."""
+        plan = self.plan
+        mesh_devices = plan.mesh_devices
+        if mesh_devices is not None and tenants % mesh_devices:
+            mesh_devices = None
+        return DAEFEngine(
+            self.config,
+            dataclasses.replace(plan, tenants=tenants,
+                                mesh_devices=mesh_devices),
+        )
+
+    def session(self) -> "FederationSession":
+        """A multi-round federation driver bound to this engine."""
+        from repro.engine.session import FederationSession
+
+        return FederationSession(self)
+
+    # ------------------------------------------------------------------
+    # save / load
+    # ------------------------------------------------------------------
+
+    def save(self, state: EngineState, path: str) -> str:
+        """Persist a trained state (msgpack-framed numpy, via
+        train.checkpoint).  Returns the checkpoint directory."""
+        from repro.train import checkpoint
+
+        self._is_fleet(state, what="save")
+        return checkpoint.save(path, state)
+
+    def load(self, path: str) -> EngineState:
+        """Restore a state saved by ``save`` under a structurally identical
+        config/plan; mesh plans re-place the fleet onto the mesh."""
+        from repro.train import checkpoint
+
+        try:
+            state = checkpoint.restore(path, self._template())
+        except ValueError as e:
+            raise PlanError(
+                f"load: checkpoint at {path!r} does not match this engine's "
+                f"config/plan ({e}); load with the engine that saved it"
+            ) from e
+        if isinstance(state, fleet.DAEFFleet) and self.plan.tenant_sharded:
+            return fleet_sharded.shard_fleet(state, self.mesh)
+        return state
+
+    def _template(self) -> EngineState:
+        """Structural skeleton matching what fit() returns — checkpoint
+        restore only consults the tree structure; shapes come from the
+        manifest."""
+        cfg = self.config
+        n_layers = len(cfg.layer_sizes)
+
+        def z():
+            return np.zeros((0,), np.float32)
+
+        if cfg.method == "gram":
+            know = rolann.RolannStats(g=z(), m=z())
+        else:
+            know = rolann.RolannFactors(u=z(), s=z(), m=z())
+        model = daef.DAEFModel(
+            weights=tuple(z() for _ in range(n_layers - 1)),
+            biases=tuple(z() for _ in range(n_layers - 2)),
+            encoder_factors=dsvd.SvdFactors(u=z(), s=z()),
+            layer_knowledge=tuple(know for _ in range(n_layers - 2)),
+            train_errors=z(),
+        )
+        if self.plan.tenants == 1:
+            return model
+        return fleet.DAEFFleet(
+            model=model, seeds=z(), lam_hidden=z(), lam_last=z()
+        )
+
+    # ------------------------------------------------------------------
+
+    def get_model(self, state: EngineState, i: int = 0) -> daef.DAEFModel:
+        """Extract tenant ``i`` as a plain single-model DAEFModel."""
+        if self._is_fleet(state, what="get_model"):
+            return fleet.get_model(state, i)
+        return state
+
+    def __repr__(self) -> str:
+        return (
+            f"DAEFEngine(layers={self.config.layer_sizes}, "
+            f"method={self.config.method!r}, "
+            f"stats_backend={self.config.stats_backend!r}, plan={self.plan})"
+        )

@@ -1,0 +1,136 @@
+"""ExecutionPlan — the declarative "where and how does this DAEF run" record.
+
+The paper's selling point is that ONE closed-form formulation covers local,
+distributed and incremental training; the repo's kernels mirror that (vmap
+fleet, tenant-mesh sharding, data-mesh federation, tree-reduce aggregation),
+but each used to carry its own call surface.  An ``ExecutionPlan`` collapses
+the choice into configuration:
+
+    plan = ExecutionPlan(mode="mesh", tenants=64, mesh_devices=8,
+                         stats_backend="fused", merge="tree")
+    engine = DAEFEngine(config, plan)
+
+* ``mode``      — "loop" (eager per-model calls, the debugging/parity
+                  baseline), "vmap" (single jitted dispatch over the tenant
+                  axis) or "mesh" (same kernels with placement: the tenant
+                  axis sharded over devices, or — for a single model — the
+                  SAMPLE axis sharded over data axes, every shard a
+                  federated node).
+* ``tenants``   — K, the number of independent per-tenant models (1 = the
+                  paper's single autoencoder).
+* ``mesh_axes`` — which named mesh axes carry the work in mesh mode:
+                  ``("tenants",)`` (default) shards the tenant axis;
+                  anything else (e.g. ``("data",)``) is the single-model
+                  data-parallel federation of `core.sharded.fit_on_mesh`.
+* ``mesh_devices`` — devices along the tenant axis (None = the largest
+                  fleet-compatible mesh over all devices).
+* ``stats_backend`` — Gram-stats producer ("einsum" | "fused"); overrides
+                  ``DAEFConfig.stats_backend``; None defers to the config /
+                  ``$REPRO_STATS_BACKEND`` precedence chain.
+* ``merge``     — federation reduce strategy for ``DAEFEngine.reduce`` and
+                  ``FederationSession.round``: "sequential" (left-to-right
+                  host reduce / the exact layer-synchronized protocol),
+                  "pairwise" (log2 rounds of vmapped pairwise merges) or
+                  "tree" (the on-mesh shard_map butterfly of
+                  `fleet_merge_tree`).
+* ``local_factorization`` — data-mesh mode only: how each shard factorizes
+                  its local Gram ("gram_eigh" | "direct_svd").
+
+Every future scenario (async aggregation, multi-host fleets, caching) is a
+new field here — not a sixth parallel module-level API.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import stats_backend as stats_backend_mod
+
+MODES = ("loop", "vmap", "mesh")
+MERGES = ("sequential", "pairwise", "tree")
+TENANT_AXES = ("tenants",)
+
+
+class PlanError(ValueError):
+    """An ExecutionPlan that cannot run — message names the fix."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Declarative placement/dispatch choice for a DAEFEngine (see module
+    docstring for field semantics).  Frozen and hashable, so a resolved plan
+    can key caches the same way a resolved DAEFConfig keys jit caches."""
+
+    mode: str = "vmap"
+    tenants: int = 1
+    mesh_devices: int | None = None
+    mesh_axes: tuple[str, ...] = TENANT_AXES
+    stats_backend: str | None = None
+    merge: str = "sequential"
+    local_factorization: str = "gram_eigh"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise PlanError(
+                f"unknown ExecutionPlan mode {self.mode!r}: choose from {MODES}"
+            )
+        if self.merge not in MERGES:
+            raise PlanError(
+                f"unknown ExecutionPlan merge {self.merge!r}: choose from "
+                f"{MERGES}"
+            )
+        if not isinstance(self.tenants, int) or self.tenants < 1:
+            raise PlanError(f"tenants must be a positive int, got {self.tenants!r}")
+        axes = self.mesh_axes
+        if isinstance(axes, str):
+            axes = (axes,)
+        object.__setattr__(self, "mesh_axes", tuple(axes))
+        if not self.mesh_axes or not all(
+            isinstance(a, str) and a for a in self.mesh_axes
+        ):
+            raise PlanError(
+                f"mesh_axes must name at least one mesh axis, got {self.mesh_axes!r}"
+            )
+        if self.mesh_devices is not None:
+            if self.mode != "mesh":
+                raise PlanError(
+                    f"mesh_devices={self.mesh_devices} only applies to "
+                    f"mode='mesh' (got mode={self.mode!r}); drop it or switch "
+                    "the mode"
+                )
+            if self.mesh_devices < 1:
+                raise PlanError(
+                    f"mesh_devices must be >= 1, got {self.mesh_devices}"
+                )
+            if self.tenant_sharded and self.tenants % self.mesh_devices:
+                raise PlanError(
+                    f"bad mesh size: tenants={self.tenants} does not divide "
+                    f"evenly over mesh_devices={self.mesh_devices} — pad the "
+                    "fleet, or resize the mesh to a divisor of the tenant "
+                    "count"
+                )
+        if self.local_factorization not in ("gram_eigh", "direct_svd",
+                                            "local_svd"):
+            raise PlanError(
+                "local_factorization must be 'gram_eigh', 'direct_svd' or "
+                f"'local_svd', got {self.local_factorization!r}"
+            )
+        if self.mode == "mesh" and not self.tenant_sharded and self.tenants > 1:
+            raise PlanError(
+                f"mesh_axes={self.mesh_axes} shards the sample axis of a "
+                f"SINGLE model, but tenants={self.tenants}; use "
+                "mesh_axes=('tenants',) for a sharded fleet, or tenants=1 "
+                "for data-parallel federation"
+            )
+        if self.stats_backend is not None:
+            # raises on unknown names (same contract as DAEFConfig)
+            stats_backend_mod.resolve(self.stats_backend)
+
+    @property
+    def tenant_sharded(self) -> bool:
+        """mesh mode that shards the TENANT axis (vs the sample axis)."""
+        return self.mode == "mesh" and self.mesh_axes == TENANT_AXES
+
+    @property
+    def data_sharded(self) -> bool:
+        """mesh mode that shards the SAMPLE axis of one model over data axes."""
+        return self.mode == "mesh" and not self.tenant_sharded

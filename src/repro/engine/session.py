@@ -1,0 +1,127 @@
+"""FederationSession — the multi-round federation driver of the engine API.
+
+The paper's §4.3 scenario as a session object: every round, a set of nodes
+contributes a private partition; the session aggregates their mergeable
+sufficient statistics into ONE logical model and carries it across rounds
+(round r+1 merges into the accumulated model — the incremental-learning
+story).  The aggregation strategy comes from the plan's ``merge`` field:
+
+* ``merge="sequential"`` — the EXACT layer-synchronized protocol
+  (subsumes `federated.federated_fit`): nodes aggregate the encoder first,
+  then proceed layer by layer, each time pooling the ROLANN knowledge
+  before solving.  With shared stage-1 randomness this reproduces the
+  centralized solution up to float error.  Works for ragged partitions.
+* ``merge="pairwise"`` — broker protocol: each node trains a full local
+  DAEF, then the models tree-reduce on the host in pairwise rounds (an odd
+  tail passes through).  Approximate (local-encoder statistics), any
+  partition count/shape.
+* ``merge="tree"`` — broker protocol reduced ON-MESH: equal-size
+  partitions train as one vmapped fleet and collapse through the
+  `fleet_merge_tree` shard_map butterfly (subsumes it; requires a
+  power-of-two node count).
+
+Messages are always the privacy-safe statistics (encoder factors +
+per-layer ROLANN knowledge) — never raw data.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daef, fleet, fleet_sharded
+from repro.engine.plan import PlanError
+
+Array = jnp.ndarray
+
+
+class FederationSession:
+    """Round-based federation bound to a DAEFEngine (see module docstring).
+
+    >>> session = engine.session()
+    >>> model = session.round(parts)        # parts: per-node [m0, n_p]
+    >>> model = session.round(new_parts)    # merged into the running model
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.model: daef.DAEFModel | None = None
+        self.rounds_run = 0
+
+    def round(self, parts: Sequence[Array]) -> daef.DAEFModel:
+        """Aggregate one federation round and fold it into the session model.
+
+        ``parts``: one [features, samples] partition per participating node.
+        Returns the accumulated aggregate (== the round aggregate on the
+        first round)."""
+        cfg = self.engine.config
+        parts = [jnp.asarray(p) for p in parts]
+        if not parts:
+            raise PlanError("round: need at least one partition")
+        m0 = cfg.layer_sizes[0]
+        for i, p in enumerate(parts):
+            if p.ndim != 2 or p.shape[0] != m0:
+                raise PlanError(
+                    f"round: partition {i} must be [features={m0}, samples], "
+                    f"got shape {tuple(p.shape)}"
+                )
+        update = self._aggregate_round(parts)
+        self.model = (
+            update if self.model is None
+            else daef.merge_models(cfg, self.model, update)
+        )
+        self.rounds_run += 1
+        return self.model
+
+    def _aggregate_round(self, parts: list[Array]) -> daef.DAEFModel:
+        cfg, merge = self.engine.config, self.engine.plan.merge
+        if merge == "sequential":
+            from repro.core import federated
+
+            return federated._federated_fit(cfg, parts)
+        if len(parts) == 1:
+            return daef.fit(cfg, parts[0])
+        if merge == "pairwise":
+            models = [daef.fit(cfg, p) for p in parts]
+            while len(models) > 1:
+                nxt = [
+                    daef.merge_models(cfg, models[i], models[i + 1])
+                    for i in range(0, len(models) - 1, 2)
+                ]
+                if len(models) % 2:
+                    nxt.append(models[-1])
+                models = nxt
+            return models[0]
+        # merge == "tree": one vmapped fleet fit + the on-mesh butterfly.
+        p = len(parts)
+        if p & (p - 1):
+            raise PlanError(
+                f"round: merge='tree' needs a power-of-two node count, got "
+                f"{p} partitions — pad the round or use merge='pairwise'"
+            )
+        lens = {part.shape[1] for part in parts}
+        if len(lens) > 1:
+            raise PlanError(
+                "round: merge='tree' stacks partitions into one fleet batch "
+                f"and needs equal sample counts, got {sorted(lens)} — pad "
+                "the partitions or use merge='sequential'/'pairwise'"
+            )
+        xs = jnp.stack(parts)
+        fl = fleet._fit_fleet(cfg, xs, seeds=None, lam_hidden=None,
+                              lam_last=None)
+        mesh = self.engine.mesh if self.engine.plan.tenant_sharded else None
+        if mesh is not None and p % mesh.shape[fleet_sharded.TENANT_AXIS]:
+            mesh = None  # round size does not tile the plan's fleet mesh
+        merged = fleet_sharded.fleet_merge_tree(cfg, fl, p, mesh=mesh)
+        return fleet.get_model(merged, 0)
+
+    def reset(self) -> None:
+        """Forget the accumulated model (start a fresh federation)."""
+        self.model = None
+        self.rounds_run = 0
+
+    def __repr__(self) -> str:
+        return (f"FederationSession(rounds_run={self.rounds_run}, "
+                f"merge={self.engine.plan.merge!r}, "
+                f"trained={self.model is not None})")

@@ -128,10 +128,10 @@ def rolann_stats_batched(
     """Tenant-batched fused stats: xa [k, m, n]; fsq, fd [k, o, n].
 
     One kernel launch for a whole tenant batch — the vmap-free entry point
-    for callers that hold a leading tenant axis.  NOTE: the fleet engine's
-    vmapped fit currently reaches the *unbatched* kernel through Pallas'
-    vmap batching rule; routing it through this single-launch variant is
-    the ROADMAP follow-up.
+    for callers that hold a leading tenant axis.  The fleet engine's vmapped
+    fit reaches this variant automatically: ``stats_backend.gram_stats``
+    carries a ``custom_vmap`` rule that rewrites the vmapped per-tenant call
+    into one batched launch (instead of Pallas' generic batching rule).
     """
     return _rolann_stats_batched(
         xa, fsq, fd, block_n=block_n, interpret=_resolve_interpret(interpret)

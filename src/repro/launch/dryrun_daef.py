@@ -1,7 +1,8 @@
 """Dry-run the paper's own technique at pod scale: DAEF federated fit.
 
-Lowers ``repro.core.sharded.fit_on_mesh`` — every data shard of the
-production mesh acting as one federated node — for an LLM-feature-sized
+Lowers the engine's data-sharded mesh plan (`repro.engine`, backed by
+``core.sharded``) — every data shard of the production mesh acting as one
+federated node — for an LLM-feature-sized
 problem (d = 2048 features, n = 4M samples, the llm_feature_anomaly head),
 in both representations:
 
@@ -29,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core import daef, sharded
+from repro.core import daef
+from repro.engine import DAEFEngine, ExecutionPlan
 from repro.launch import roofline as roofline_mod
 from repro.launch.mesh import data_axes, make_production_mesh
 
@@ -45,11 +47,15 @@ def build(method: str, *, d: int, n: int, multi_pod: bool, latent: int,
     )
     x_spec = jax.ShapeDtypeStruct((d, n), jnp.float32)
     axes = data_axes(mesh)
+    engine = DAEFEngine(
+        cfg,
+        ExecutionPlan(mode="mesh", mesh_axes=axes,
+                      local_factorization=local_fact),
+        mesh=mesh,
+    )
 
     def fit(x):
-        model = sharded.fit_on_mesh(
-            cfg, x, mesh, data_axes=axes, local_factorization=local_fact
-        )
+        model = engine.fit(x)
         # Return weights + per-shard train errors (the deployable artifact).
         return model.weights, model.biases, model.train_errors
 

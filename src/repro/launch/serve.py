@@ -30,18 +30,16 @@ from repro.models import get_bundle
 
 
 def run_fleet(args) -> None:
-    """Train + serve a fleet of per-tenant anomaly detectors."""
-    from repro.core import daef, fleet, fleet_sharded
+    """Train + serve a fleet of per-tenant anomaly detectors.
+
+    Everything goes through the unified engine facade: placement
+    (``--mesh-tenants``) and the stats backend are ExecutionPlan fields, not
+    different call paths.
+    """
+    from repro.core import daef, fleet_sharded
+    from repro.engine import DAEFEngine, ExecutionPlan, PlanError
 
     k, n_pad = args.fleet, args.pad
-    mesh = None
-    if args.mesh_tenants:
-        d = args.mesh_tenants
-        if k % d:
-            raise SystemExit(f"--fleet {k} must be divisible by --mesh-tenants {d}")
-        mesh = fleet_sharded.tenant_mesh(d)  # raises if > available devices
-        print(f"fleet: sharding {k} tenants over a {d}-device '"
-              f"{fleet_sharded.TENANT_AXIS}' mesh axis ({k // d} per device)")
     datasets = [
         synthetic.make_dataset("cardio", seed=t, scale=args.scale) for t in range(k)
     ]
@@ -50,23 +48,30 @@ def run_fleet(args) -> None:
     xs_train = np.stack([s[0][:, :n_train] for s in splits]).astype(np.float32)
     m0 = xs_train.shape[1]
 
-    cfg = daef.DAEFConfig(
-        layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9,
-        stats_backend=args.stats_backend,
-    ).resolved()
-    print(f"fleet: Gram-stats backend '{cfg.stats_backend}'")
-    t0 = time.perf_counter()
-    if mesh is not None:
-        # The host-built batch is placed BY SHARDING: each device pulls only
-        # its K/D tenant slice, never a full replicated copy.
-        fl = fleet_sharded.sharded_fleet_fit(
-            cfg, xs_train, mesh, seeds=jnp.arange(k)
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9, lam_last=0.9)
+    try:
+        plan = ExecutionPlan(
+            mode="mesh" if args.mesh_tenants else "vmap",
+            tenants=k,
+            mesh_devices=args.mesh_tenants or None,
+            stats_backend=args.stats_backend,
         )
-    else:
-        fl = fleet.fleet_fit(cfg, jnp.asarray(xs_train), seeds=jnp.arange(k))
+        engine = DAEFEngine(cfg, plan)
+    except PlanError as e:  # bad mesh sizes etc. -> clean CLI error
+        raise SystemExit(f"error: {e}") from e
+    print(f"fleet: Gram-stats backend '{engine.config.stats_backend}'")
+    if engine.mesh is not None:
+        d = engine.mesh.shape[fleet_sharded.TENANT_AXIS]
+        print(f"fleet: sharding {k} tenants over a {d}-device '"
+              f"{fleet_sharded.TENANT_AXIS}' mesh axis ({k // d} per device)")
+
+    t0 = time.perf_counter()
+    # Mesh plans place the host-built batch BY SHARDING: each device pulls
+    # only its K/D tenant slice, never a full replicated copy.
+    fl = engine.fit(xs_train, seeds=jnp.arange(k))
     jax.block_until_ready(fl.model.train_errors)
     t_fit = time.perf_counter() - t0
-    mus = fleet.fleet_thresholds(fl, rule="q90")
+    mus = engine.thresholds(fl, rule="q90")
     print(f"fleet: trained {k} tenant models [{m0} features, {n_train} samples] "
           f"in one dispatch ({t_fit:.2f}s incl. JIT)")
 
@@ -87,14 +92,8 @@ def run_fleet(args) -> None:
             idx = rng.choice(x_test.shape[1], size=counts[t], replace=False)
             batch[t, :, : counts[t]] = x_test[:, idx]
         t0 = time.perf_counter()
-        if mesh is not None:
-            scores = fleet_sharded.sharded_fleet_scores(
-                cfg, fl, batch, n_valid=counts, mesh=mesh
-            )
-        else:
-            scores = fleet.fleet_scores(cfg, fl, jnp.asarray(batch),
-                                        n_valid=jnp.asarray(counts))
-        flags = fleet.fleet_classify(scores, mus)
+        scores = engine.scores(fl, batch, n_valid=jnp.asarray(counts))
+        flags = engine.classify(scores, mus)
         jax.block_until_ready(flags)
         lat.append(time.perf_counter() - t0)
         round_served.append(int(counts.sum()))

@@ -3,8 +3,8 @@
 Wraps repro.core.daef around transformer hidden states: fit NON-ITERATIVELY
 on pooled activations of in-distribution traffic, then score new sequences by
 reconstruction error.  Works with every ModelBundle family (it only consumes
-activation matrices), federates across data shards (fit_on_mesh), and never
-ships raw activations between nodes — the deployment story of
+activation matrices), federates across data shards (a data-sharded
+`repro.engine` mesh plan), and never ships raw activations between nodes — the deployment story of
 examples/llm_feature_anomaly.py as a library component.
 """
 from __future__ import annotations
@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import anomaly, daef
-from repro.core.sharded import fit_on_mesh
 
 Array = jnp.ndarray
 
@@ -64,6 +63,8 @@ def fit_head(
     federated node); otherwise a host fit with ``n_partitions`` exercising
     the same merge path.
     """
+    from repro.engine import DAEFEngine, ExecutionPlan
+
     feats = jnp.asarray(feats)
     mean = feats.mean(axis=0)
     std = feats.std(axis=0) + 1e-6
@@ -71,7 +72,11 @@ def fit_head(
     if cfg is None:
         cfg = default_config(x.shape[0])
     if mesh is not None:
-        model = fit_on_mesh(cfg, x, mesh, data_axes=data_axes)
+        engine = DAEFEngine(
+            cfg, ExecutionPlan(mode="mesh", mesh_axes=tuple(data_axes)),
+            mesh=mesh,
+        )
+        model = engine.fit(x)
     else:
         model = daef.fit(cfg, x, n_partitions=n_partitions)
     thr = anomaly.threshold(model.train_errors, rule)

@@ -225,3 +225,41 @@ def test_svd_method_ignores_backend_but_accepts_it():
     _assert_trees_close(
         daef.fit(cfg_f, x), daef.fit(cfg_e, x), what="svd method backend-independence"
     )
+
+
+def test_vmapped_gram_stats_routes_through_batched(monkeypatch):
+    """The fleet engine's tenant vmap must collapse gram_stats into ONE
+    tenant-batched dispatch (the custom_vmap rule) — for the fused backend a
+    single rolann_stats_batched kernel launch, not Pallas' generic per-tenant
+    batching rule — and agree with the per-tenant loop."""
+    calls = []
+    orig = stats_backend.gram_stats_batched
+
+    def spy(xa, fsq, fd, *, backend=None):
+        calls.append((tuple(xa.shape), backend))
+        return orig(xa, fsq, fd, backend=backend)
+
+    monkeypatch.setattr(stats_backend, "gram_stats_batched", spy)
+    stats_backend._gram_stats_fn.cache_clear()
+    rng = np.random.default_rng(0)
+    xa = jnp.asarray(rng.normal(size=(5, 6, 40)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.1, 1.0, (5, 3, 40)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(5, 3, 40)), jnp.float32)
+    try:
+        for backend in stats_backend.BACKENDS:
+            calls.clear()
+            g, m = jax.vmap(
+                lambda a, b, c: stats_backend.gram_stats(a, b, c, backend=backend)
+            )(xa, fsq, fd)
+            assert calls, f"{backend}: batched variant was not dispatched"
+            assert calls[0] == ((5, 6, 40), backend)
+            for i in range(5):
+                gi, mi = stats_backend.gram_stats(
+                    xa[i], fsq[i], fd[i], backend=backend
+                )
+                np.testing.assert_allclose(np.asarray(g[i]), np.asarray(gi),
+                                           atol=1e-5, rtol=1e-5)
+                np.testing.assert_allclose(np.asarray(m[i]), np.asarray(mi),
+                                           atol=1e-5, rtol=1e-5)
+    finally:
+        stats_backend._gram_stats_fn.cache_clear()
