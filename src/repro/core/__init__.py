@@ -17,12 +17,19 @@ The unified engine (``repro.engine``): client code should not pick between
 these execution paths by importing different modules — construct a
 ``DAEFEngine`` from a ``DAEFConfig`` plus a declarative ``ExecutionPlan``
 (mode="loop"|"vmap"|"mesh", tenants=K, mesh_axes/mesh_devices,
-stats_backend, merge="sequential"|"pairwise"|"tree") and use one spelling
-of ``fit / partial_fit / predict / scores / merge / reduce / save / load``
-plus the round-based ``FederationSession``.  The engine dispatches to the
-modules above; the old module-level fit entry points (``fleet.fleet_fit``,
+stats_backend, merge="sequential"|"pairwise"|"tree", chunk_samples for
+streamed training) and use one spelling of ``fit / fit_stream /
+partial_fit / predict / scores / merge / reduce / save / load`` plus the
+round-based ``FederationSession``.  The engine dispatches to the modules
+above; the old module-level fit entry points (``fleet.fleet_fit``,
 ``fleet_sharded.sharded_fleet_fit``, ``federated.federated_fit``,
 ``sharded.fit_on_mesh``) remain as thin deprecation shims over it.
+
+Streaming: the paper's sufficient statistics are additive over sample
+blocks, so training is also available as a bounded-memory fold —
+``daef.fit_chunked`` (scan over on-device chunks) and ``daef.fit_stream``
+(host chunk iterator), built on ``rolann.init_stats``/``accumulate_stats``,
+``elm_ae.accumulate_layer_stats`` and ``dsvd.masked_gram``.
 """
 from repro.core import (  # noqa: F401
     activations,

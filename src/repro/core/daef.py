@@ -19,10 +19,13 @@ Data convention (paper): X is [features m0, samples n].
 from __future__ import annotations
 
 import dataclasses
+import functools
+from functools import partial
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import activations, dsvd, elm_ae, rolann, stats_backend
 
@@ -49,6 +52,12 @@ class DAEFConfig:
     seed: int = 0                     # shared randomness across federated nodes
     stats_backend: str | None = None  # Gram-stats producer: "einsum" | "fused"
                                       # | None (resolve $REPRO_STATS_BACKEND)
+    gram_solver: str = "chol"         # gram-knowledge weight solve: "chol"
+                                      # (direct Cholesky, the fast default) |
+                                      # "eigh" (factorization route) | "auto"
+                                      # (chol + eigh rescue for near-singular
+                                      # G; under vmapped fleets the rescue
+                                      # lowers to a both-branches select)
 
     def __post_init__(self):
         if len(self.layer_sizes) < 3:
@@ -60,6 +69,11 @@ class DAEFConfig:
             )
         if self.stats_backend is not None:
             stats_backend.resolve(self.stats_backend)  # raises on unknown names
+        if self.gram_solver not in rolann.GRAM_SOLVERS:
+            raise ValueError(
+                f"unknown gram_solver {self.gram_solver!r}: choose from "
+                f"{rolann.GRAM_SOLVERS}"
+            )
 
     def resolved(self) -> "DAEFConfig":
         """This config with ``stats_backend`` made concrete (env resolved).
@@ -170,6 +184,7 @@ def _fit_core(
             aux_bias=config.aux_bias,
             method=config.method,
             backend=config.stats_backend,
+            gram_solver=config.gram_solver,
         )
         weights.append(res.w)
         biases.append(res.b)
@@ -178,13 +193,358 @@ def _fit_core(
 
     # ---- last layer: supervised ROLANN to reconstruct X (lines 20-25) ----
     w_ll, b_ll, k_ll = rolann.fit(
-        h, x, f_ll, lam_last, method=config.method, backend=config.stats_backend
+        h, x, f_ll, lam_last, method=config.method,
+        backend=config.stats_backend, gram_solver=config.gram_solver,
     )
     weights.append(w_ll)
     biases.append(b_ll)
     knowledge.append(k_ll)
     recon = f_ll.fn(w_ll.T @ h + b_ll[:, None])
     train_errors = jnp.mean((recon - x) ** 2, axis=0)
+
+    return DAEFModel(
+        weights=tuple(weights),
+        biases=tuple(biases),
+        encoder_factors=enc,
+        layer_knowledge=tuple(knowledge),
+        train_errors=train_errors,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming / chunked training (bounded-memory Alg. 1)
+#
+# The paper's sufficient statistics are additive over sample blocks (Eq. 6-9),
+# so the whole fit is a FOLD: pass 1 accumulates the encoder Gram chunk by
+# chunk, passes 2..L recompute the (cheap) chunk activations on the fly and
+# fold each decoder layer's (G, M) via `stats_backend.gram_stats_acc`, and a
+# final pass scores the train errors.  Peak memory is O(m^2 + chunk) instead
+# of O(m * n); the result is numerically the one-shot gram-method fit (same
+# merge algebra, associativity over chunks).
+#
+# Two drivers share the same per-chunk math:
+#   * `fit_chunked`    — x on device, one `lax.scan` per layer (vmappable:
+#                        the fleet engine streams whole fleets this way);
+#   * `fit_stream`     — x never on device at once: a host chunk source feeds
+#                        fixed-shape chunks into one re-traced jitted step per
+#                        layer whose accumulators are DONATED, so steady-state
+#                        device memory is the running stats plus one chunk.
+# ---------------------------------------------------------------------------
+
+def _require_gram(config: DAEFConfig, what: str) -> None:
+    if config.method != "gram":
+        raise ValueError(
+            f"{what} accumulates Gram sufficient statistics chunk by chunk "
+            "(method='gram'); method='svd' factors have no additive chunk "
+            "form — switch the config to method='gram'"
+        )
+
+
+def _stream_forward(config: DAEFConfig, x: Array, weights, biases) -> Array:
+    """Forward one chunk through the encoder + the solved decoder layers so
+    far (all hidden activations) — the recompute-on-the-fly of each pass."""
+    f_hl, _ = _acts(config)
+    h = f_hl.fn(weights[0].T @ x)
+    for w, b in zip(weights[1:], biases):
+        h = f_hl.fn(w.T @ h + b[:, None])
+    return h
+
+
+def _fit_chunked_core(
+    config: DAEFConfig,
+    x: Array,
+    keys,
+    lam_hidden,
+    lam_last,
+    *,
+    chunk: int,
+) -> DAEFModel:
+    """Traceable chunked Alg. 1 body: one `lax.scan` over sample chunks per
+    layer, accumulating (G, M) in the scan carry (XLA reuses the carry
+    buffers in place; the fused backend's accumulating kernel aliases them
+    too).  Vmaps over a leading tenant axis exactly like `_fit_core` — the
+    fleet engine's streaming path."""
+    m0, n = x.shape
+    f_hl, f_ll = _acts(config)
+    sizes = config.layer_sizes
+    chunk = min(chunk, max(n, 1))
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    mask = (jnp.arange(n_chunks * chunk) < n).astype(x.dtype)
+    mask = mask.reshape(n_chunks, chunk)
+    xc = jnp.moveaxis(xp.reshape(m0, n_chunks, chunk), 1, 0)  # [c#, m0, chunk]
+
+    # ---- pass 1: encoder Gram, chunk by chunk ----
+    def enc_step(g, inp):
+        xcg, mk = inp
+        return g + dsvd.masked_gram(xcg, mk), None
+
+    g_enc, _ = jax.lax.scan(enc_step, jnp.zeros((m0, m0), x.dtype), (xc, mask))
+    enc = dsvd.truncate(dsvd.gram_to_factors(g_enc), min(m0, n))
+    w_enc = enc.u[:, : config.latent_dim]
+
+    weights = [w_enc]
+    biases: list[Array] = []
+    knowledge: list = []
+
+    # ---- passes 2..L-1: decoder layers, stats folded per chunk ----
+    for li in range(2, len(sizes) - 1):
+        w_c1, b_c1 = elm_ae.stage1(
+            keys[li], sizes[li - 1], sizes[li], config.init, x.dtype
+        )
+        solved = (tuple(weights), tuple(biases))
+
+        def layer_step(stats, inp, _solved=solved, _wc1=w_c1, _bc1=b_c1):
+            xcg, mk = inp
+            h = _stream_forward(config, xcg, *_solved)
+            stats = elm_ae.accumulate_layer_stats(
+                stats, _wc1, _bc1, h, f_hl, weights=mk,
+                backend=config.stats_backend,
+            )
+            return stats, None
+
+        stats0 = rolann.init_stats(sizes[li], sizes[li - 1], f_hl, x.dtype)
+        stats, _ = jax.lax.scan(layer_step, stats0, (xc, mask))
+        w_next, b_next = elm_ae.layer_from_knowledge(
+            stats, keys[li], sizes[li - 1], sizes[li], lam_hidden, f_hl,
+            init=config.init, aux_bias=config.aux_bias, dtype=x.dtype,
+            gram_solver=config.gram_solver,
+        )
+        weights.append(w_next)
+        biases.append(b_next)
+        knowledge.append(stats)
+
+    # ---- pass L: last layer against the original inputs ----
+    solved = (tuple(weights), tuple(biases))
+
+    def last_step(stats, inp):
+        xcg, mk = inp
+        h = _stream_forward(config, xcg, *solved)
+        stats = rolann.accumulate_stats(
+            stats, h, xcg, f_ll, weights=mk, backend=config.stats_backend
+        )
+        return stats, None
+
+    stats0 = rolann.init_stats(sizes[-2], m0, f_ll, x.dtype)
+    k_ll, _ = jax.lax.scan(last_step, stats0, (xc, mask))
+    w_ll, b_ll = rolann.solve(k_ll, lam_last, gram_solver=config.gram_solver)
+    weights.append(w_ll)
+    biases.append(b_ll)
+    knowledge.append(k_ll)
+
+    # ---- final pass: per-sample train errors ----
+    def err_step(carry, inp):
+        xcg, _ = inp
+        h = _stream_forward(config, xcg, tuple(weights[:-1]), tuple(biases[:-1]))
+        recon = f_ll.fn(w_ll.T @ h + b_ll[:, None])
+        return carry, jnp.mean((recon - xcg) ** 2, axis=0)
+
+    _, errs = jax.lax.scan(err_step, jnp.zeros((), x.dtype), (xc, mask))
+    train_errors = errs.reshape(-1)[:n]
+
+    return DAEFModel(
+        weights=tuple(weights),
+        biases=tuple(biases),
+        encoder_factors=enc,
+        layer_knowledge=tuple(knowledge),
+        train_errors=train_errors,
+    )
+
+
+def fit_chunked(config: DAEFConfig, x: Array, *, chunk_samples: int) -> DAEFModel:
+    """Alg. 1 with bounded activation memory: `fit`, as a fold over
+    ``chunk_samples``-wide sample chunks (see the section comment above).
+
+    Matches ``fit(config, x)`` (gram method) within accumulation-order float
+    error for every chunk size, including chunk widths that do not divide n
+    (the ragged tail is padded and masked exactly).
+    """
+    m0 = x.shape[0]
+    if m0 != config.layer_sizes[0]:
+        raise ValueError(f"input dim {m0} != layer_sizes[0] {config.layer_sizes[0]}")
+    if not isinstance(chunk_samples, int) or chunk_samples < 1:
+        raise ValueError(f"chunk_samples must be a positive int, got {chunk_samples!r}")
+    config = config.resolved()
+    _require_gram(config, "fit_chunked")
+    return _fit_chunked_core(
+        config, x, config.layer_keys(), config.lam_hidden, config.lam_last,
+        chunk=chunk_samples,
+    )
+
+
+# ---- host-streaming driver (data never fully on device) ----
+
+def _stream_chunk_source(batches):
+    """Normalize a chunk source into a zero-arg factory of fresh iterators.
+
+    Accepts a zero-arg callable (called once per pass — true streaming, e.g.
+    re-opening a file reader), or any iterable (materialized ONCE into a host
+    list of chunk references; the chunks themselves are not copied).  The fit
+    makes one pass per layer, so one-shot generators are snapshotted.
+    """
+    if callable(batches):
+        return batches
+    chunks = list(batches)
+    return lambda: iter(chunks)
+
+
+@functools.lru_cache(maxsize=256)
+def _chunk_mask(width: int, n_valid: int) -> jax.Array:
+    """One device-resident mask per (width, valid-prefix) — every full chunk
+    of a stream reuses a single buffer instead of re-uploading per step."""
+    return (jnp.arange(width) < n_valid).astype(jnp.float32)
+
+
+def _iter_padded_chunks(factory, ndim: int, m0: int, what: str):
+    """Yield (chunk, mask, n_valid) with the ragged tail padded to the fixed
+    chunk width.  Only the LAST chunk may be narrower; mid-stream width
+    changes are an error (the jitted step is traced once per shape)."""
+    it = iter(factory())
+    prev = next(it, None)
+    if prev is None:
+        raise ValueError(f"{what}: empty chunk stream")
+    width = None
+    while prev is not None:
+        cur = next(it, None)
+        x = prev if isinstance(prev, jax.Array) else np.asarray(prev)
+        if x.ndim != ndim or x.shape[-2] != m0:
+            raise ValueError(
+                f"{what}: chunk shape {getattr(x, 'shape', None)} does not "
+                f"match the expected [{'K, ' if ndim == 3 else ''}{m0}, "
+                "chunk_samples] layout"
+            )
+        c = x.shape[-1]
+        if width is None:
+            width = c
+        if c != width:
+            if cur is not None or c > width:
+                raise ValueError(
+                    f"{what}: chunk widths must be fixed ({width}); got a "
+                    f"{'mid-stream' if cur is not None else 'wider final'} "
+                    f"chunk of width {c} — re-chunk the source (only the "
+                    "last chunk may be narrower)"
+                )
+            pad = [(0, 0)] * (ndim - 1) + [(0, width - c)]
+            x = jnp.pad(x, pad) if isinstance(x, jax.Array) else np.pad(x, pad)
+        yield x, _chunk_mask(width, c), c
+        prev = cur
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _stream_enc_step(g, x, mask):
+    return g + dsvd.masked_gram(x, mask)
+
+
+@partial(jax.jit, static_argnames=("config",), donate_argnums=(1,))
+def _stream_layer_step(config, stats, params, x, mask):
+    weights, biases, w_c1, b_c1 = params
+    f_hl, _ = _acts(config)
+    h = _stream_forward(config, x, weights, biases)
+    return elm_ae.accumulate_layer_stats(
+        stats, w_c1, b_c1, h, f_hl, weights=mask, backend=config.stats_backend
+    )
+
+
+@partial(jax.jit, static_argnames=("config",), donate_argnums=(1,))
+def _stream_last_step(config, stats, params, x, mask):
+    weights, biases = params
+    _, f_ll = _acts(config)
+    h = _stream_forward(config, x, weights, biases)
+    return rolann.accumulate_stats(
+        stats, h, x, f_ll, weights=mask, backend=config.stats_backend
+    )
+
+
+def _errors_chunk(config, params, x):
+    """Per-sample reconstruction MSE of one chunk under solved weights."""
+    weights, biases = params
+    _, f_ll = _acts(config)
+    h = _stream_forward(config, x, weights[:-1], biases[:-1])
+    recon = f_ll.fn(weights[-1].T @ h + biases[-1][:, None])
+    return jnp.mean((recon - x) ** 2, axis=0)
+
+
+_stream_errors_chunk = partial(jax.jit, static_argnames=("config",))(_errors_chunk)
+
+
+def fit_stream(config: DAEFConfig, batches) -> DAEFModel:
+    """Alg. 1 over data that never fits on device at once.
+
+    ``batches`` is a host chunk source — an iterable of fixed-shape
+    ``[m0, chunk_samples]`` arrays (only the last may be narrower), or a
+    zero-arg callable returning a fresh iterator per pass (true streaming
+    from disk; the fit makes one pass per layer plus an error-scoring pass).
+    Each pass feeds chunks into ONE re-traced jitted step whose accumulator
+    argument is donated, so steady-state device memory is the running
+    O(m^2) statistics plus a single chunk.
+
+    Numerically matches ``fit(config, concatenate(batches))`` (gram method)
+    within accumulation-order float error.
+    """
+    config = config.resolved()
+    _require_gram(config, "fit_stream")
+    factory = _stream_chunk_source(batches)
+    keys = config.layer_keys()
+    f_hl, f_ll = _acts(config)
+    sizes = config.layer_sizes
+    m0 = sizes[0]
+
+    # ---- pass 1: encoder Gram ----
+    g = None
+    n_total = 0
+    for x, mask, n_valid in _iter_padded_chunks(factory, 2, m0, "fit_stream"):
+        if g is None:
+            g = jnp.zeros((m0, m0), jnp.asarray(x).dtype)
+        g = _stream_enc_step(g, x, mask)
+        n_total += n_valid
+    enc = dsvd.truncate(dsvd.gram_to_factors(g), min(m0, n_total))
+    w_enc = enc.u[:, : config.latent_dim]
+    dtype = w_enc.dtype
+
+    weights = [w_enc]
+    biases: list[Array] = []
+    knowledge: list = []
+
+    # ---- passes 2..L-1: decoder layers ----
+    for li in range(2, len(sizes) - 1):
+        w_c1, b_c1 = elm_ae.stage1(
+            keys[li], sizes[li - 1], sizes[li], config.init, dtype
+        )
+        params = (tuple(weights), tuple(biases), w_c1, b_c1)
+        stats = rolann.init_stats(sizes[li], sizes[li - 1], f_hl, dtype)
+        for x, mask, _ in _iter_padded_chunks(factory, 2, m0, "fit_stream"):
+            stats = _stream_layer_step(config, stats, params, x, mask)
+        w_next, b_next = elm_ae.layer_from_knowledge(
+            stats, keys[li], sizes[li - 1], sizes[li], config.lam_hidden, f_hl,
+            init=config.init, aux_bias=config.aux_bias, dtype=dtype,
+            gram_solver=config.gram_solver,
+        )
+        weights.append(w_next)
+        biases.append(b_next)
+        knowledge.append(stats)
+
+    # ---- pass L: last layer ----
+    params = (tuple(weights), tuple(biases))
+    stats = rolann.init_stats(sizes[-2], m0, f_ll, dtype)
+    for x, mask, _ in _iter_padded_chunks(factory, 2, m0, "fit_stream"):
+        stats = _stream_last_step(config, stats, params, x, mask)
+    w_ll, b_ll = rolann.solve(stats, config.lam_last,
+                              gram_solver=config.gram_solver)
+    weights.append(w_ll)
+    biases.append(b_ll)
+    knowledge.append(stats)
+
+    # ---- final pass: train errors ----
+    params = (tuple(weights), tuple(biases))
+    errs = []
+    for x, _, n_valid in _iter_padded_chunks(factory, 2, m0, "fit_stream"):
+        # collect on host so in-flight device memory stays O(m^2 + chunk);
+        # the [n] error pool goes back to device once, as the model leaf.
+        # copy=True: np.asarray of a CPU-backend jax.Array is zero-copy and
+        # would pin every chunk's device buffer alive.
+        errs.append(np.array(_stream_errors_chunk(config, params, x)[:n_valid]))
+    train_errors = jnp.asarray(np.concatenate(errs))
 
     return DAEFModel(
         weights=tuple(weights),
@@ -284,11 +644,13 @@ def _model_from_knowledge(
         w, bias = elm_ae.layer_from_knowledge(
             knowledge[li - 2], keys[li], sizes[li - 1], sizes[li], lam_hidden, f_hl,
             init=config.init, aux_bias=config.aux_bias, dtype=w_enc.dtype,
+            gram_solver=config.gram_solver,
         )
         weights.append(w)
         biases.append(bias)
 
-    w_ll, b_ll = rolann.solve(knowledge[-1], lam_last)
+    w_ll, b_ll = rolann.solve(knowledge[-1], lam_last,
+                              gram_solver=config.gram_solver)
     weights.append(w_ll)
     biases.append(b_ll)
 

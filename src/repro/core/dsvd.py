@@ -73,6 +73,16 @@ def gram(x: Array) -> Array:
     return x @ x.T
 
 
+def masked_gram(x: Array, mask: Array | None = None) -> Array:
+    """Gram contribution of one sample chunk; ``mask`` ([n] in {0, 1}) zeroes
+    padded columns exactly, so streamed fits can pad ragged chunks to a fixed
+    shape.  Accumulating these per chunk == ``gram`` of the concatenation —
+    the additivity the encoder's streaming pass relies on."""
+    if mask is None:
+        return x @ x.T
+    return (x * mask.astype(x.dtype)[None, :]) @ x.T
+
+
 def gram_to_factors(g: Array) -> SvdFactors:
     """eigh of the summed Gram == the merged SVD factors (fast path)."""
     evals, evecs = jnp.linalg.eigh(g)

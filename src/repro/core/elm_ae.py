@@ -58,6 +58,7 @@ def train_layer(
     aux_bias: str = "zero",
     method: str = "gram",
     backend: str | None = None,
+    gram_solver: str = "chol",
 ) -> LayerResult:
     """Alg. 2: train the decoder layer mapping H_l [m_l, n] -> H_{l+1}."""
     m_l = h_l.shape[0]
@@ -69,7 +70,8 @@ def train_layer(
     # W_{l+1} in R^{m_l x m_next} so that H_{l+1} = f(W_{l+1}^T H_l + b 1^T)
     # (Eq. 4); the ELM-AE transpose trick W_{l+1} = W_c2^T gives exactly that.
     w_c2, _b_c2, knowledge = rolann.fit(
-        h_c1, h_l, act, lam, method=method, backend=backend
+        h_c1, h_l, act, lam, method=method, backend=backend,
+        gram_solver=gram_solver,
     )
     w_next = w_c2.T  # [m_l, m_next]
     if aux_bias == "zero":
@@ -107,6 +109,31 @@ def layer_knowledge_from_partition(
     return rolann.compute_factors(h_c1, h_l, act)
 
 
+def accumulate_layer_stats(
+    stats: rolann.RolannStats,
+    w_c1: Array,
+    b_c1: Array,
+    h_l: Array,
+    act: activations.Activation,
+    *,
+    weights: Array | None = None,
+    backend: str | None = None,
+) -> rolann.RolannStats:
+    """Streaming building block: fold one sample chunk of layer inputs
+    ``h_l`` [m_l, n_chunk] into the decoder layer's running ROLANN statistics.
+
+    The auxiliary stage-1 projection is recomputed for the chunk (cheap: one
+    matmul + activation) and the reconstruction statistics h_c1 -> h_l are
+    accumulated via `rolann.accumulate_stats`; summed over all chunks this
+    equals `train_layer`'s one-shot statistics, so the solved weights match
+    the non-streaming fit.  ``weights`` masks padded sample columns.
+    """
+    h_c1 = act.fn(w_c1.T @ h_l + b_c1[:, None])
+    return rolann.accumulate_stats(
+        stats, h_c1, h_l, act, weights=weights, backend=backend
+    )
+
+
 def layer_from_knowledge(
     knowledge: rolann.RolannFactors | rolann.RolannStats,
     key: jax.Array,
@@ -118,9 +145,10 @@ def layer_from_knowledge(
     init: str = "xavier",
     aux_bias: str = "zero",
     dtype=jnp.float32,
+    gram_solver: str = "chol",
 ) -> tuple[Array, Array]:
     """Solve the decoder layer weights from (merged) federated knowledge."""
-    w_c2, _ = rolann.solve(knowledge, lam)
+    w_c2, _ = rolann.solve(knowledge, lam, gram_solver=gram_solver)
     w_next = w_c2.T
     if aux_bias == "zero":
         b_next = jnp.zeros((m_next,), dtype)

@@ -139,6 +139,7 @@ def _federated_fit(
         w, b = elm_ae.layer_from_knowledge(
             k, keys[li], sizes[li - 1], sizes[li], config.lam_hidden, f_hl,
             init=config.init, aux_bias=config.aux_bias, dtype=w_enc.dtype,
+            gram_solver=config.gram_solver,
         )
         weights.append(w)
         biases.append(b)
@@ -152,7 +153,8 @@ def _federated_fit(
         for h, p in zip(hs, partitions)
     ]
     k_ll = _aggregate(locals_, use_gram)
-    w_ll, b_ll = rolann.solve(k_ll, config.lam_last)
+    w_ll, b_ll = rolann.solve(k_ll, config.lam_last,
+                              gram_solver=config.gram_solver)
     weights.append(w_ll)
     biases.append(b_ll)
     knowledge.append(k_ll)

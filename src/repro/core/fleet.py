@@ -25,8 +25,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import anomaly, daef
+from repro.core import anomaly, daef, dsvd, elm_ae, rolann
 
 Array = jnp.ndarray
 
@@ -95,6 +96,22 @@ def _fleet_fit(config, xs, seeds, lam_hidden, lam_last, *, n_partitions=1):
     return jax.vmap(one)(xs, seeds, lam_hidden, lam_last)
 
 
+@partial(jax.jit, static_argnames=("config", "chunk_samples"))
+def _fleet_fit_chunked_kernel(config, xs, seeds, lam_hidden, lam_last, *,
+                              chunk_samples):
+    """One jitted dispatch streaming a whole fleet: the chunked scan core
+    vmapped over tenants — per chunk, every tenant's per-layer stats fold in
+    ONE tenant-batched accumulating dispatch (`gram_stats_acc`'s custom_vmap
+    rule lowers to `rolann_stats_acc_batched` on the fused backend)."""
+
+    def one(x, seed, lh, ll):
+        keys = _tenant_keys(config, seed)
+        return daef._fit_chunked_core(config, x, keys, lh, ll,
+                                      chunk=chunk_samples)
+
+    return jax.vmap(one)(xs, seeds, lam_hidden, lam_last)
+
+
 @partial(jax.jit, static_argnames=("config",))
 def _fleet_predict(config, model, xs):
     return jax.vmap(partial(daef.predict, config))(model, xs)
@@ -140,6 +157,206 @@ def _fit_fleet(
     )
     model = _fleet_fit(
         config, xs, seeds, lam_hidden, lam_last, n_partitions=n_partitions
+    )
+    return DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
+                     lam_last=lam_last)
+
+
+def _fit_fleet_chunked(
+    config: daef.DAEFConfig,
+    xs: Array,
+    *,
+    chunk_samples: int,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+) -> DAEFFleet:
+    """Streaming fleet fit (the engine's ``ExecutionPlan(chunk_samples=...)``
+    path): K tenants trained by the chunked `lax.scan` core in one jitted
+    vmap dispatch — peak activation memory O(K * (m^2 + chunk)) instead of
+    O(K * m * n)."""
+    config = config.resolved()
+    daef._require_gram(config, "chunked fleet fit")
+    seeds, lam_hidden, lam_last = _prepare_fit(
+        config, xs, seeds, lam_hidden, lam_last
+    )
+    model = _fleet_fit_chunked_kernel(
+        config, xs, seeds, lam_hidden, lam_last, chunk_samples=chunk_samples
+    )
+    return DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
+                     lam_last=lam_last)
+
+
+# ---------------------------------------------------------------------------
+# Host-streaming fleet fit: fixed-shape [K, m0, chunk] host chunks feed one
+# re-traced jitted step per layer with DONATED accumulators (see daef
+# "Streaming / chunked training") — device memory never holds the fleet's
+# full sample axis.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _fleet_stream_enc_step(g, xs, mask):
+    return g + jax.vmap(dsvd.masked_gram, in_axes=(0, None))(xs, mask)
+
+
+@partial(jax.jit, static_argnames=("config",), donate_argnums=(1,))
+def _fleet_stream_layer_step(config, stats, params, xs, mask):
+    weights, biases, w_c1, b_c1 = params  # every leaf leads with [K]
+    f_hl, _ = daef._acts(config)
+
+    def one(stats_i, w_i, b_i, wc1_i, bc1_i, x_i):
+        h = daef._stream_forward(config, x_i, w_i, b_i)
+        return elm_ae.accumulate_layer_stats(
+            stats_i, wc1_i, bc1_i, h, f_hl, weights=mask,
+            backend=config.stats_backend,
+        )
+
+    return jax.vmap(one)(stats, weights, biases, w_c1, b_c1, xs)
+
+
+@partial(jax.jit, static_argnames=("config",), donate_argnums=(1,))
+def _fleet_stream_last_step(config, stats, params, xs, mask):
+    weights, biases = params
+    _, f_ll = daef._acts(config)
+
+    def one(stats_i, w_i, b_i, x_i):
+        h = daef._stream_forward(config, x_i, w_i, b_i)
+        return rolann.accumulate_stats(
+            stats_i, h, x_i, f_ll, weights=mask, backend=config.stats_backend
+        )
+
+    return jax.vmap(one)(stats, weights, biases, xs)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _fleet_stream_errors_chunk(config, params, xs):
+    return jax.vmap(
+        lambda w, b, x: daef._errors_chunk(config, (w, b), x)
+    )(*params, xs)
+
+
+def _fit_fleet_stream(
+    config: daef.DAEFConfig,
+    batches,
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+    place=None,
+    tenants: int | None = None,
+) -> DAEFFleet:
+    """Streaming fleet fit from a host chunk source of ``[K, m0, chunk]``
+    arrays (an iterable, or a zero-arg callable yielding a fresh iterator
+    per pass — one pass per layer plus the error pass).
+
+    ``place`` (optional) maps every leading-[K] device input — chunks and
+    initial accumulators — onto its placement (the engine passes the tenant
+    sharding for mesh plans), so a mesh fleet streams without a replicated
+    host staging copy.
+    """
+    config = config.resolved()
+    daef._require_gram(config, "streaming fleet fit")
+    factory = daef._stream_chunk_source(batches)
+    f_hl, f_ll = daef._acts(config)
+    sizes = config.layer_sizes
+    m0 = sizes[0]
+    place = place if place is not None else (lambda a: a)
+
+    def chunks():
+        k = tenants
+        for x, mask, n_valid in daef._iter_padded_chunks(
+            factory, 3, m0, "fleet fit_stream"
+        ):
+            if k is None:
+                k = x.shape[0]
+            elif x.shape[0] != k:
+                raise ValueError(
+                    f"fleet fit_stream: chunks carry {x.shape[0]} tenants "
+                    f"but {k} were expected"
+                    + ("" if tenants is not None else " (tenant count "
+                       "changed mid-stream)")
+                )
+            yield place(x), mask, n_valid
+
+    # ---- pass 1: encoder Grams ----
+    g = None
+    n_total = 0
+    k = None
+    for x, mask, n_valid in chunks():
+        if g is None:
+            k = x.shape[0]
+            g = place(jnp.zeros((k, m0, m0), jnp.asarray(x).dtype))
+        g = _fleet_stream_enc_step(g, x, mask)
+        n_total += n_valid
+    seeds = place(_per_tenant(seeds, config.seed, k, jnp.int32))
+    lam_hidden = place(_per_tenant(lam_hidden, config.lam_hidden, k, g.dtype))
+    lam_last = place(_per_tenant(lam_last, config.lam_last, k, g.dtype))
+    keys = jax.vmap(lambda s: daef.layer_keys_from_seed(s, len(sizes)))(seeds)
+    rank = min(m0, n_total)
+    enc = jax.vmap(lambda gi: dsvd.truncate(dsvd.gram_to_factors(gi), rank))(g)
+    w_enc = enc.u[:, :, : config.latent_dim]
+    dtype = w_enc.dtype
+
+    weights = [w_enc]
+    biases: list[Array] = []
+    knowledge: list = []
+
+    # ---- passes 2..L-1: decoder layers ----
+    for li in range(2, len(sizes) - 1):
+        w_c1, b_c1 = jax.vmap(
+            lambda key: elm_ae.stage1(key, sizes[li - 1], sizes[li],
+                                      config.init, dtype)
+        )(keys[:, li])
+        params = (tuple(weights), tuple(biases), w_c1, b_c1)
+        stats = place(jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (k, *leaf.shape)),
+            rolann.init_stats(sizes[li], sizes[li - 1], f_hl, dtype),
+        ))
+        for x, mask, _ in chunks():
+            stats = _fleet_stream_layer_step(config, stats, params, x, mask)
+        w_next, b_next = jax.vmap(
+            lambda st, key, lh: elm_ae.layer_from_knowledge(
+                st, key, sizes[li - 1], sizes[li], lh, f_hl,
+                init=config.init, aux_bias=config.aux_bias, dtype=dtype,
+                gram_solver=config.gram_solver,
+            )
+        )(stats, keys[:, li], lam_hidden)
+        weights.append(w_next)
+        biases.append(b_next)
+        knowledge.append(stats)
+
+    # ---- pass L: last layer ----
+    params = (tuple(weights), tuple(biases))
+    stats = place(jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (k, *leaf.shape)),
+        rolann.init_stats(sizes[-2], m0, f_ll, dtype),
+    ))
+    for x, mask, _ in chunks():
+        stats = _fleet_stream_last_step(config, stats, params, x, mask)
+    w_ll, b_ll = jax.vmap(
+        lambda st, ll: rolann.solve(st, ll, gram_solver=config.gram_solver)
+    )(stats, lam_last)
+    weights.append(w_ll)
+    biases.append(b_ll)
+    knowledge.append(stats)
+
+    # ---- final pass: train errors ----
+    params = (tuple(weights), tuple(biases))
+    errs = []
+    for x, _, n_valid in chunks():
+        # np.array (a real copy): zero-copy conversion would pin each
+        # chunk's device buffer alive for the whole pass
+        errs.append(
+            np.array(_fleet_stream_errors_chunk(config, params, x)[:, :n_valid])
+        )
+    train_errors = jnp.asarray(np.concatenate(errs, axis=1))
+
+    model = daef.DAEFModel(
+        weights=tuple(weights),
+        biases=tuple(biases),
+        encoder_factors=enc,
+        layer_knowledge=tuple(knowledge),
+        train_errors=place(train_errors),
     )
     return DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
                      lam_last=lam_last)

@@ -118,6 +118,7 @@ def _fit_sharded(
     lam_hidden=None,
     lam_last=None,
     n_partitions: int = 1,
+    chunk_samples: int | None = None,
 ) -> fleet.DAEFFleet:
     """The vmapped fleet fit with the tenant axis sharded over ``mesh`` —
     the engine's mode="mesh" fit path (`sharded_fleet_fit` is its
@@ -125,7 +126,9 @@ def _fit_sharded(
 
     The vmap-batched fit kernel has no cross-tenant data flow, so XLA
     compiles it into independent per-shard programs; the returned fleet's
-    leaves stay sharded over tenants.
+    leaves stay sharded over tenants.  With ``chunk_samples`` the per-shard
+    program is the chunked-scan streaming core (bounded activation memory
+    per device) instead of the one-shot fit.
     """
     config = config.resolved()
     seeds, lam_hidden, lam_last = fleet._prepare_fit(
@@ -136,11 +139,39 @@ def _fit_sharded(
     seeds = jax.device_put(seeds, spec)
     lam_hidden = jax.device_put(lam_hidden, spec)
     lam_last = jax.device_put(lam_last, spec)
-    model = fleet._fleet_fit(
-        config, xs, seeds, lam_hidden, lam_last, n_partitions=n_partitions
-    )
+    if chunk_samples is not None:
+        model = fleet._fleet_fit_chunked_kernel(
+            config, xs, seeds, lam_hidden, lam_last,
+            chunk_samples=chunk_samples,
+        )
+    else:
+        model = fleet._fleet_fit(
+            config, xs, seeds, lam_hidden, lam_last, n_partitions=n_partitions
+        )
     return fleet.DAEFFleet(model=model, seeds=seeds, lam_hidden=lam_hidden,
                            lam_last=lam_last)
+
+
+def _fit_sharded_stream(
+    config: daef.DAEFConfig,
+    batches,
+    mesh: Mesh,
+    *,
+    seeds=None,
+    lam_hidden=None,
+    lam_last=None,
+    tenants: int | None = None,
+) -> fleet.DAEFFleet:
+    """Host-streaming fleet fit with the tenant axis sharded over ``mesh``:
+    every chunk (and the running accumulators) is placed by sharding, so each
+    device pulls only its K/D tenant slice of each chunk — the fleet's full
+    sample axis never exists on any device."""
+    spec = tenant_sharding(mesh)
+    return fleet._fit_fleet_stream(
+        config, batches, seeds=seeds, lam_hidden=lam_hidden,
+        lam_last=lam_last, tenants=tenants,
+        place=lambda a: jax.device_put(a, spec),
+    )
 
 
 def sharded_fleet_fit(
@@ -202,18 +233,25 @@ def sharded_fleet_predict(
     return fleet.fleet_predict(config, fl, shard_batch(xs, mesh))
 
 
-@partial(jax.jit, static_argnames=("config",), donate_argnames=("model",))
-def _partial_fit_kernel(config, model, xs_new, seeds, lam_hidden, lam_last):
+@partial(jax.jit, static_argnames=("config", "chunk_samples"),
+         donate_argnames=("model",))
+def _partial_fit_kernel(config, model, xs_new, seeds, lam_hidden, lam_last,
+                        chunk_samples=None):
     def one(m, x, seed, lh, ll):
         keys = daef.layer_keys_from_seed(seed, len(config.layer_sizes))
-        upd = daef._fit_core(config, x, keys, lh, ll)
+        if chunk_samples is not None:
+            upd = daef._fit_chunked_core(config, x, keys, lh, ll,
+                                         chunk=chunk_samples)
+        else:
+            upd = daef._fit_core(config, x, keys, lh, ll)
         return daef._merge_core(config, m, upd, keys, lh, ll)
 
     return jax.vmap(one)(model, xs_new, seeds, lam_hidden, lam_last)
 
 
 def sharded_fleet_partial_fit(
-    config: daef.DAEFConfig, fl: fleet.DAEFFleet, xs_new, *, mesh: Mesh
+    config: daef.DAEFConfig, fl: fleet.DAEFFleet, xs_new, *, mesh: Mesh,
+    chunk_samples: int | None = None,
 ) -> fleet.DAEFFleet:
     """Incremental update for every tenant, sharded and DONATING.
 
@@ -226,6 +264,8 @@ def sharded_fleet_partial_fit(
     if xs_new.shape[0] != fl.size:
         raise ValueError(f"update batch has {xs_new.shape[0]} tenants, fleet {fl.size}")
     config = config.resolved()
+    if chunk_samples is not None:
+        daef._require_gram(config, "chunked sharded partial_fit")
     with warnings.catch_warnings():
         # train_errors grows on merge (the absorbed block's errors are
         # appended), so that one leaf legitimately cannot reuse its donated
@@ -235,7 +275,7 @@ def sharded_fleet_partial_fit(
         )
         model = _partial_fit_kernel(
             config, fl.model, shard_batch(xs_new, mesh), fl.seeds,
-            fl.lam_hidden, fl.lam_last,
+            fl.lam_hidden, fl.lam_last, chunk_samples=chunk_samples,
         )
     return fleet.DAEFFleet(model=model, seeds=fl.seeds,
                            lam_hidden=fl.lam_hidden, lam_last=fl.lam_last)

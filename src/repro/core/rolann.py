@@ -117,6 +117,62 @@ def compute_stats(
     return RolannStats(g=g, m=m_vec)
 
 
+def init_stats(
+    n_inputs: int, n_outputs: int, act: activations.Activation, dtype=jnp.float32
+) -> RolannStats:
+    """Zero Gram-form accumulators for a streamed fit over inputs [n_inputs, ·]
+    and targets [n_outputs, ·] — the identity of ``merge_stats``.  Linear
+    activations share one Gram across outputs (see ``compute_stats``)."""
+    m_aug = n_inputs + 1  # bias row
+    if act.name == "linear":
+        g = jnp.zeros((m_aug, m_aug), dtype)
+    else:
+        g = jnp.zeros((n_outputs, m_aug, m_aug), dtype)
+    return RolannStats(g=g, m=jnp.zeros((n_outputs, m_aug), dtype))
+
+
+def accumulate_stats(
+    stats: RolannStats,
+    x: Array,
+    d: Array,
+    act: activations.Activation,
+    *,
+    weights: Array | None = None,
+    backend: str | None = None,
+) -> RolannStats:
+    """Fold one sample chunk into running Gram-form statistics.
+
+    Mathematically ``merge_stats(stats, compute_stats(x, d, act))`` — the
+    paper's Eq. 6-7 statistics are additive over sample blocks — but computed
+    as a single accumulating fold (`stats_backend.gram_stats_acc`): the fused
+    backend aliases the running (G, M) onto the kernel outputs, so a chunked
+    fit makes one HBM pass per chunk with no re-zeroing.
+
+    ``weights`` ([n] in {0, 1}) masks padded sample columns: a zero weight
+    removes the column's contribution to both G and M exactly, so ragged
+    chunks can be padded to a fixed shape without biasing the statistics.
+    """
+    act = activations.get(act.name, invertible_required=True)
+    xa = _augment(x)  # [m+1, n]
+    dbar, fp = _targets(d, act)
+    fsq = fp * fp
+    fd = fsq * dbar
+    if weights is not None:
+        w = weights.astype(xa.dtype)
+        fsq = fsq * w[None, :]
+        fd = fd * w[None, :]
+    if act.name == "linear":
+        # Shared F: fp == 1, so masking must hit the Gram's columns directly.
+        xw = xa if weights is None else xa * w[None, :]
+        g = stats.g + xw @ xa.T
+        m_vec = stats.m + jnp.einsum("in,on->oi", xa, fd)
+        return RolannStats(g=g, m=m_vec)
+    g, m_vec = stats_backend.gram_stats_acc(
+        stats.g, stats.m, xa, fsq, fd, backend=backend
+    )
+    return RolannStats(g=g, m=m_vec)
+
+
 def compute_factors(x: Array, d: Array, act: activations.Activation) -> RolannFactors:
     """Paper-faithful statistics via SVD of Xa F (Eq. 6-7)."""
     act = activations.get(act.name, invertible_required=True)
@@ -216,11 +272,13 @@ def merge_factors_list(items: list[RolannFactors]) -> RolannFactors:
         m_dim = cat.shape[-2]
         return u[..., :, :m_dim], s[..., :m_dim]
 
+    if len({f.shared_f for f in items}) != 1:
+        raise ValueError("cannot merge shared-F with per-output factors")
     us = [f.u * f.s[..., None, :] for f in items]
-    if items[0].shared_f:
-        u, s = one(us)
-    else:
-        u, s = one(us)  # batched SVD handles the leading out axis
+    # One code path for both layouts: the batched SVD in `one` handles the
+    # leading out axis when present and degenerates to the plain 2-D SVD for
+    # shared-F factors.
+    u, s = one(us)
     m = sum(f.m for f in items[1:]) + items[0].m
     return RolannFactors(u=u, s=s, m=m)
 
@@ -229,19 +287,85 @@ def merge_factors_list(items: list[RolannFactors]) -> RolannFactors:
 # Solving for weights
 # ---------------------------------------------------------------------------
 
-def solve(knowledge: RolannFactors | RolannStats, lam: float) -> tuple[Array, Array]:
-    """Return (W [m_in, out], b [out]) from accumulated knowledge (Eq. 10)."""
+GRAM_SOLVERS = ("chol", "auto", "eigh")
+
+
+def _solve_factors(knowledge: RolannFactors, lam) -> Array:
+    """Factor-form augmented weights: w_aug[:, j] = U (S^2+lam)^-1 U^T m_j."""
+    u, s, m = knowledge
+    if knowledge.shared_f:
+        proj = u.T @ m.T  # [r, out]
+        return u @ (proj / (s * s + lam)[:, None])  # [m, out]
+    proj = jnp.einsum("oir,oi->or", u, m)
+    return jnp.einsum("oir,or->oi", u, proj / (s * s + lam)).T  # [m, out]
+
+
+def _solve_stats_chol(stats: RolannStats, lam) -> Array:
+    """Gram-form augmented weights by direct Cholesky: (G + lam I) w_j = m_j.
+
+    G = U S^2 U^T with a full orthonormal eigenbasis, so this is the same
+    linear system the eigh route diagonalizes — one triangular factorization
+    (O(m^3/3), small constant) instead of a batched symmetric eigendecomposition.
+    """
+    m_dim = stats.m.shape[-1]
+    eye = jnp.eye(m_dim, dtype=stats.g.dtype)
+    if stats.shared_f:
+        chol = jnp.linalg.cholesky(stats.g + lam * eye)
+        return jax.scipy.linalg.cho_solve((chol, True), stats.m.T)  # [m, out]
+
+    def one(g, m_j):
+        chol = jnp.linalg.cholesky(g + lam * eye)
+        return jax.scipy.linalg.cho_solve((chol, True), m_j)
+
+    return jax.vmap(one)(stats.g, stats.m).T  # [m, out]
+
+
+def solve(
+    knowledge: RolannFactors | RolannStats,
+    lam: float,
+    *,
+    gram_solver: str = "chol",
+) -> tuple[Array, Array]:
+    """Return (W [m_in, out], b [out]) from accumulated knowledge (Eq. 10).
+
+    Gram-form knowledge (`RolannStats`) solves ``(G + lam I) w = M`` directly
+    by Cholesky — ``G + lam I`` is symmetric positive definite by construction
+    (G is PSD, lam > 0) — which is the post-stats hot spot: it replaces the
+    batched eigh of ``stats_to_factors`` on every gram-method fit/merge.
+
+    ``gram_solver`` selects the route for stats knowledge:
+
+    * ``"chol"`` (default) — direct Cholesky solve;
+    * ``"eigh"``           — the factorization route (eigh + factor solve),
+                             kept for near-singular G (lam vanishingly small
+                             relative to ||G||, where a float32 Cholesky can
+                             break down) and as the parity oracle;
+    * ``"auto"``           — Cholesky, rescued by the eigh route when the
+                             triangular solve comes back non-finite.  The
+                             rescue is a ``lax.cond``: lazy (taken branch
+                             only) in straight-line jit, but under ``vmap``
+                             it lowers to a select that pays BOTH routes —
+                             prefer "chol" on batched hot paths.
+
+    Factor-form knowledge (`RolannFactors`) always uses the factor solve.
+    """
+    if gram_solver not in GRAM_SOLVERS:
+        raise ValueError(
+            f"unknown gram_solver {gram_solver!r}: choose from {GRAM_SOLVERS}"
+        )
+    if isinstance(knowledge, RolannStats) and gram_solver != "eigh":
+        w_aug = _solve_stats_chol(knowledge, lam)
+        if gram_solver == "auto":
+            w_aug = jax.lax.cond(
+                jnp.all(jnp.isfinite(w_aug)),
+                lambda w: w,
+                lambda w: _solve_factors(stats_to_factors(knowledge), lam),
+                w_aug,
+            )
+        return w_aug[:-1, :], w_aug[-1, :]
     if isinstance(knowledge, RolannStats):
         knowledge = stats_to_factors(knowledge)
-    u, s, m = knowledge
-
-    if knowledge.shared_f:
-        # w_aug[:, j] = U (S^2+lam)^-1 U^T m_j
-        proj = u.T @ m.T  # [r, out]
-        w_aug = u @ (proj / (s * s + lam)[:, None])  # [m, out]
-    else:
-        proj = jnp.einsum("oir,oi->or", u, m)
-        w_aug = jnp.einsum("oir,or->oi", u, proj / (s * s + lam)).T  # [m, out]
+    w_aug = _solve_factors(knowledge, lam)
     return w_aug[:-1, :], w_aug[-1, :]
 
 
@@ -253,11 +377,13 @@ def fit(
     *,
     method: str = "gram",
     backend: str | None = None,
+    gram_solver: str = "chol",
 ) -> tuple[Array, Array, RolannFactors | RolannStats]:
     """One-shot ROLANN fit. Returns (W, b, knowledge).
 
     method: "gram" (fast path, psum-mergeable) or "svd" (paper-faithful).
     backend: Gram-stats producer for the "gram" method (stats_backend).
+    gram_solver: weight-solve route for gram knowledge (see `solve`).
     """
     if method == "gram":
         knowledge: RolannFactors | RolannStats = compute_stats(
@@ -267,7 +393,7 @@ def fit(
         knowledge = compute_factors(x, d, act)
     else:
         raise ValueError(f"unknown ROLANN method {method!r}")
-    w, b = solve(knowledge, lam)
+    w, b = solve(knowledge, lam, gram_solver=gram_solver)
     return w, b, knowledge
 
 

@@ -163,6 +163,7 @@ def _fit_on_mesh(
                 merged, keys[li], sizes[li - 1], sizes[li],
                 config.lam_hidden, f_hl,
                 init=config.init, aux_bias=config.aux_bias, dtype=xp.dtype,
+                gram_solver=config.gram_solver,
             )
             weights.append(w)
             biases.append(b)
@@ -183,7 +184,8 @@ def _fit_on_mesh(
         else:
             u, s = _gather_merge_svd(local.u * local.s[..., None, :], axes)
             merged = rolann.RolannFactors(u=u, s=s, m=_psum(local.m, axes))
-        w_ll, b_ll = rolann.solve(merged, config.lam_last)
+        w_ll, b_ll = rolann.solve(merged, config.lam_last,
+                                  gram_solver=config.gram_solver)
         weights.append(w_ll)
         biases.append(b_ll)
         knowledge.append(merged)

@@ -126,5 +126,81 @@ def gram_stats_batched(
     return g, m
 
 
+# ---------------------------------------------------------------------------
+# Accumulating dispatch — the streaming/chunked training path folds each
+# sample chunk into running (G, M) accumulators instead of materializing the
+# full-sample statistics in one contraction.
+# ---------------------------------------------------------------------------
+
+def _gram_stats_acc_unbatched(g, m, xa, fsq, fd, backend: str):
+    if backend == "fused":
+        from repro.kernels.rolann_stats import rolann_stats_acc
+
+        return rolann_stats_acc(g, m, xa, fsq, fd)
+    g = g + jnp.einsum("in,on,jn->oij", xa, fsq, xa)
+    m = m + jnp.einsum("in,on->oi", xa, fd)
+    return g, m
+
+
+@functools.lru_cache(maxsize=None)
+def _gram_stats_acc_fn(backend: str):
+    """``gram_stats_acc`` body with the same custom batching rule as
+    ``gram_stats``: vmapping the fold (the fleet engine's tenant axis)
+    collapses into ONE tenant-batched accumulating dispatch — for the fused
+    backend a single aliased-accumulator kernel launch
+    (``rolann_stats_acc_batched``)."""
+
+    @jax.custom_batching.custom_vmap
+    def f(g, m, xa, fsq, fd):
+        return _gram_stats_acc_unbatched(g, m, xa, fsq, fd, backend)
+
+    @f.def_vmap
+    def _batched_rule(axis_size, in_batched, g, m, xa, fsq, fd):  # noqa: ARG001
+        def lift(arg, batched):
+            return arg if batched else jnp.broadcast_to(
+                arg[None], (axis_size, *arg.shape)
+            )
+
+        args = [lift(a, b) for a, b in zip((g, m, xa, fsq, fd), in_batched)]
+        return gram_stats_acc_batched(*args, backend=backend), (True, True)
+
+    return f
+
+
+def gram_stats_acc(
+    g: Array, m: Array, xa: Array, fsq: Array, fd: Array,
+    *, backend: str | None = None,
+) -> tuple[Array, Array]:
+    """Fold one sample chunk into running stats: (g, m) += (G, M) of the chunk.
+
+    g [o, mm, mm], m [o, mm] are the running accumulators (mm = rows of xa);
+    xa [mm, n_chunk]; fsq, fd [o, n_chunk].  The fused backend aliases the
+    accumulators onto the kernel outputs — one HBM pass per chunk, no
+    re-zeroing and no separate add; inside a compiled caller (a scan carry,
+    or a streaming step jitted with donated accumulators) the fold reuses
+    the running buffers in place.
+
+    Vmapping this fold (the streamed fleet fit does, over the tenant axis)
+    dispatches to :func:`gram_stats_acc_batched` via a ``custom_vmap`` rule —
+    one batched launch per chunk for the whole fleet.
+    """
+    return _gram_stats_acc_fn(resolve(backend))(g, m, xa, fsq, fd)
+
+
+def gram_stats_acc_batched(
+    g: Array, m: Array, xa: Array, fsq: Array, fd: Array,
+    *, backend: str | None = None,
+) -> tuple[Array, Array]:
+    """Tenant-batched accumulating fold: g [k, o, mm, mm], xa [k, mm, n]."""
+    backend = resolve(backend)
+    if backend == "fused":
+        from repro.kernels.rolann_stats import rolann_stats_acc_batched
+
+        return rolann_stats_acc_batched(g, m, xa, fsq, fd)
+    g = g + jnp.einsum("kin,kon,kjn->koij", xa, fsq, xa)
+    m = m + jnp.einsum("kin,kon->koi", xa, fd)
+    return g, m
+
+
 __all__ = ["BACKENDS", "ENV_VAR", "DEFAULT", "resolve", "gram_stats",
-           "gram_stats_batched"]
+           "gram_stats_batched", "gram_stats_acc", "gram_stats_acc_batched"]

@@ -2,10 +2,17 @@
 
 The engine binds a ``DAEFConfig`` (the math: layer sizes, lambdas, knowledge
 representation) to an ``ExecutionPlan`` (the placement: loop / vmap / mesh,
-tenant count, merge strategy, stats backend) and exposes ONE spelling of
+tenant count, merge strategy, stats backend, streaming chunk width) and
+exposes ONE spelling of
 
-    fit / partial_fit / predict / scores / merge / reduce /
+    fit / fit_stream / partial_fit / predict / scores / merge / reduce /
     thresholds / classify / save / load / session
+
+Training is a fold over the paper's additive sufficient statistics:
+``ExecutionPlan(chunk_samples=...)`` makes ``fit``/``partial_fit``
+accumulate per-layer Gram statistics over sample chunks (peak memory flat
+in the sample count), and ``fit_stream`` drives the same fold from a host
+chunk iterator for data that never fits on device at once.
 
 Internally it dispatches to the existing kernels — the eager single-model
 core (`core.daef`), the vmapped fleet kernels (`core.fleet`), the
@@ -66,6 +73,13 @@ class DAEFEngine:
             config = dataclasses.replace(config, stats_backend=plan.stats_backend)
         config = config.resolved()
         plan = dataclasses.replace(plan, stats_backend=config.stats_backend)
+        if plan.chunk_samples is not None and config.method != "gram":
+            raise PlanError(
+                f"chunk_samples={plan.chunk_samples} streams the fit by "
+                "accumulating Gram sufficient statistics chunk by chunk, but "
+                f"config.method={config.method!r} — SVD factors have no "
+                "additive chunk form; use method='gram'"
+            )
         self.config = config
         self.plan = plan
         self._mesh = None
@@ -224,8 +238,21 @@ class DAEFEngine:
 
         ``seeds`` / ``lam_hidden`` / ``lam_last`` are scalar-or-[K]
         per-tenant overrides (fleet only); ``n_partitions`` splits samples to
-        exercise the distributed SVD/merge path (loop + vmap modes)."""
+        exercise the distributed SVD/merge path (loop + vmap modes).
+
+        With ``plan.chunk_samples`` set, training streams: every layer's
+        statistics accumulate over sample chunks (one scan pass per layer)
+        instead of materializing the full activations — same result as the
+        one-shot fit within accumulation-order float error, peak memory flat
+        in the sample count."""
         cfg, plan = self.config, self.plan
+        chunk = plan.chunk_samples
+        if chunk is not None and n_partitions != 1:
+            raise PlanError(
+                f"fit: n_partitions={n_partitions} simulates explicit "
+                "partitions but plan.chunk_samples already streams the "
+                "sample axis — drop one of the two"
+            )
         if not self._check_x(x, what="fit"):
             if seeds is not None or lam_hidden is not None or lam_last is not None:
                 raise PlanError(
@@ -237,6 +264,8 @@ class DAEFEngine:
                     cfg, x, self.mesh, data_axes=plan.mesh_axes,
                     local_factorization=plan.local_factorization,
                 )
+            if chunk is not None:
+                return daef.fit_chunked(cfg, x, chunk_samples=chunk)
             return daef.fit(cfg, x, n_partitions=n_partitions)
 
         if plan.mode == "loop":
@@ -244,7 +273,12 @@ class DAEFEngine:
                 cfg, x, seeds, lam_hidden, lam_last
             )
             models = [
-                daef.fit(
+                daef.fit_chunked(
+                    self._tenant_cfg(seeds, lam_hidden, lam_last, i),
+                    x[i], chunk_samples=chunk,
+                )
+                if chunk is not None
+                else daef.fit(
                     self._tenant_cfg(seeds, lam_hidden, lam_last, i),
                     x[i], n_partitions=n_partitions,
                 )
@@ -255,18 +289,120 @@ class DAEFEngine:
                 lam_last=lam_last,
             )
         if plan.mode == "vmap":
+            if chunk is not None:
+                return fleet._fit_fleet_chunked(
+                    cfg, x, chunk_samples=chunk, seeds=seeds,
+                    lam_hidden=lam_hidden, lam_last=lam_last,
+                )
             return fleet._fit_fleet(
                 cfg, x, seeds=seeds, lam_hidden=lam_hidden, lam_last=lam_last,
                 n_partitions=n_partitions,
             )
         return fleet_sharded._fit_sharded(
             cfg, x, self.mesh, seeds=seeds, lam_hidden=lam_hidden,
-            lam_last=lam_last, n_partitions=n_partitions,
+            lam_last=lam_last, n_partitions=n_partitions, chunk_samples=chunk,
+        )
+
+    def fit_stream(
+        self,
+        batches,
+        *,
+        seeds=None,
+        lam_hidden=None,
+        lam_last=None,
+    ) -> EngineState:
+        """Train from a host chunk source — data that never fits on device.
+
+        ``batches`` yields fixed-shape chunks — ``[features, chunk_samples]``
+        for a single model, ``[K, features, chunk_samples]`` for a fleet
+        (only the final chunk may be narrower; it is padded and masked
+        exactly).  Accepts any iterable (snapshotted into a host list of
+        chunk references — the fit makes one pass per layer) or a zero-arg
+        callable returning a fresh iterator per pass (true streaming, e.g.
+        re-opening a file reader).
+
+        Each pass feeds chunks into one re-traced jitted step whose
+        accumulators are donated; mesh plans place every chunk by sharding,
+        so a device only ever holds its tenant slice of one chunk plus the
+        O(m^2) running statistics.  Matches ``fit`` on the concatenated data
+        within accumulation-order float error."""
+        cfg, plan = self.config, self.plan
+        if cfg.method != "gram":
+            raise PlanError(
+                "fit_stream accumulates Gram sufficient statistics; "
+                f"config.method={cfg.method!r} has no additive chunk form — "
+                "use method='gram'"
+            )
+        if plan.data_sharded:
+            raise PlanError(
+                "fit_stream streams host chunks, but the plan shards the "
+                f"sample axis on-mesh (mesh_axes={plan.mesh_axes}) — use "
+                "mode='vmap'/'loop' or a tenant-sharded mesh plan"
+            )
+        if plan.tenants == 1:
+            if seeds is not None or lam_hidden is not None or lam_last is not None:
+                raise PlanError(
+                    "fit_stream: per-tenant seeds/lambdas apply to fleet "
+                    "streams; for a single model set them on the DAEFConfig"
+                )
+            return daef.fit_stream(cfg, batches)
+        if plan.mode == "loop":
+            factory = daef._stream_chunk_source(batches)
+            seeds, lam_hidden, lam_last = self._prepare_stream_fleet(
+                factory, seeds, lam_hidden, lam_last
+            )
+            if not callable(batches):
+                # snapshot sources: convert each chunk to host ONCE and hand
+                # every tenant a view — not K device-to-host copies per chunk
+                host_chunks = [np.asarray(c) for c in factory()]
+                factory = lambda: iter(host_chunks)  # noqa: E731
+            models = [
+                daef.fit_stream(
+                    self._tenant_cfg(seeds, lam_hidden, lam_last, i),
+                    lambda i=i: (np.asarray(c)[i] for c in factory()),
+                )
+                for i in range(plan.tenants)
+            ]
+            return fleet.fleet_from_models(
+                cfg, models, seeds=seeds, lam_hidden=lam_hidden,
+                lam_last=lam_last,
+            )
+        if plan.mode == "vmap":
+            return fleet._fit_fleet_stream(
+                cfg, batches, seeds=seeds, lam_hidden=lam_hidden,
+                lam_last=lam_last, tenants=plan.tenants,
+            )
+        return fleet_sharded._fit_sharded_stream(
+            cfg, batches, self.mesh, seeds=seeds, lam_hidden=lam_hidden,
+            lam_last=lam_last, tenants=plan.tenants,
+        )
+
+    def _prepare_stream_fleet(self, factory, seeds, lam_hidden, lam_last):
+        """Loop-mode stream helper: peek one chunk to learn K, then broadcast
+        the per-tenant hyperparameters exactly as the batched paths do."""
+        first = next(iter(factory()), None)
+        if first is None:
+            raise PlanError("fit_stream: empty chunk stream")
+        shape = getattr(first, "shape", None)
+        if shape is None or len(shape) != 3 or shape[0] != self.plan.tenants:
+            raise PlanError(
+                f"fit_stream: fleet chunks must be [K={self.plan.tenants}, "
+                f"features, chunk_samples], got {shape}"
+            )
+        k = shape[0]
+        return (
+            fleet._per_tenant(seeds, self.config.seed, k, jnp.int32),
+            fleet._per_tenant(lam_hidden, self.config.lam_hidden, k, jnp.float32),
+            fleet._per_tenant(lam_last, self.config.lam_last, k, jnp.float32),
         )
 
     def partial_fit(self, state: EngineState, x_new) -> EngineState:
-        """Incremental learning: absorb a new data block (per tenant)."""
+        """Incremental learning: absorb a new data block (per tenant).
+
+        Honors ``plan.chunk_samples``: the update block is fitted by the
+        streaming accumulator before the knowledge merge."""
         cfg, plan = self.config, self.plan
+        chunk = plan.chunk_samples
         if not self._is_fleet(state, what="partial_fit"):
             self._check_x(x_new, what="partial_fit")
             if plan.data_sharded:
@@ -275,30 +411,47 @@ class DAEFEngine:
                     local_factorization=plan.local_factorization,
                 )
                 return daef.merge_models(cfg, state, update)
+            if chunk is not None:
+                update = daef.fit_chunked(cfg, x_new, chunk_samples=chunk)
+                return daef.merge_models(cfg, state, update)
             return daef.partial_fit(cfg, state, x_new)
         self._check_x(x_new, what="partial_fit")
         if plan.mode == "loop":
-            models = [
-                daef.partial_fit(
-                    self._tenant_cfg(
-                        state.seeds, state.lam_hidden, state.lam_last, i
-                    ),
-                    fleet.get_model(state, i), x_new[i],
+            models = []
+            for i in range(plan.tenants):
+                cfg_i = self._tenant_cfg(
+                    state.seeds, state.lam_hidden, state.lam_last, i
                 )
-                for i in range(plan.tenants)
-            ]
+                if chunk is not None:
+                    update = daef.fit_chunked(cfg_i, x_new[i],
+                                              chunk_samples=chunk)
+                    models.append(
+                        daef.merge_models(cfg_i, fleet.get_model(state, i),
+                                          update)
+                    )
+                else:
+                    models.append(
+                        daef.partial_fit(cfg_i, fleet.get_model(state, i),
+                                         x_new[i])
+                    )
             return fleet.fleet_from_models(
                 cfg, models, seeds=state.seeds, lam_hidden=state.lam_hidden,
                 lam_last=state.lam_last,
             )
         if plan.mode == "vmap":
-            update = fleet._fit_fleet(
-                cfg, x_new, seeds=state.seeds, lam_hidden=state.lam_hidden,
-                lam_last=state.lam_last,
-            )
+            if chunk is not None:
+                update = fleet._fit_fleet_chunked(
+                    cfg, x_new, chunk_samples=chunk, seeds=state.seeds,
+                    lam_hidden=state.lam_hidden, lam_last=state.lam_last,
+                )
+            else:
+                update = fleet._fit_fleet(
+                    cfg, x_new, seeds=state.seeds, lam_hidden=state.lam_hidden,
+                    lam_last=state.lam_last,
+                )
             return fleet.fleet_merge(cfg, state, update)
         return fleet_sharded.sharded_fleet_partial_fit(
-            cfg, state, x_new, mesh=self.mesh
+            cfg, state, x_new, mesh=self.mesh, chunk_samples=chunk,
         )
 
     def _tenant_cfg(self, seeds, lam_hidden, lam_last, i: int) -> daef.DAEFConfig:

@@ -35,6 +35,17 @@ the choice into configuration:
                   `fleet_merge_tree`).
 * ``local_factorization`` — data-mesh mode only: how each shard factorizes
                   its local Gram ("gram_eigh" | "direct_svd").
+* ``chunk_samples`` — streaming training: ``fit``/``partial_fit`` accumulate
+                  the per-layer Gram statistics over sample chunks of this
+                  width (one ``lax.scan`` pass per layer) instead of
+                  materializing every [m_l, n] activation, so peak training
+                  memory is O(m^2 + chunk_samples) per tenant — flat in n.
+                  Requires the gram knowledge representation
+                  (``DAEFConfig.method="gram"``); the result matches the
+                  one-shot fit within accumulation-order float error.  Also
+                  the default chunk width expected by
+                  ``DAEFEngine.fit_stream`` (host-iterator streaming for data
+                  that never fits on device at once).
 
 Every future scenario (async aggregation, multi-host fleets, caching) is a
 new field here — not a sixth parallel module-level API.
@@ -67,6 +78,7 @@ class ExecutionPlan:
     stats_backend: str | None = None
     merge: str = "sequential"
     local_factorization: str = "gram_eigh"
+    chunk_samples: int | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -121,6 +133,20 @@ class ExecutionPlan:
                 "mesh_axes=('tenants',) for a sharded fleet, or tenants=1 "
                 "for data-parallel federation"
             )
+        if self.chunk_samples is not None:
+            if not isinstance(self.chunk_samples, int) or self.chunk_samples < 1:
+                raise PlanError(
+                    f"chunk_samples must be a positive int, got "
+                    f"{self.chunk_samples!r}"
+                )
+            if self.mode == "mesh" and not self.tenant_sharded:
+                raise PlanError(
+                    "chunk_samples streams the SAMPLE axis chunk by chunk, "
+                    f"but mesh_axes={self.mesh_axes} already shards the "
+                    "sample axis of a single model across devices — drop "
+                    "chunk_samples, or use mesh_axes=('tenants',) / "
+                    "mode='vmap' for a streamed fit"
+                )
         if self.stats_backend is not None:
             # raises on unknown names (same contract as DAEFConfig)
             stats_backend_mod.resolve(self.stats_backend)

@@ -135,3 +135,132 @@ def rolann_stats_kernel_batched(
         ],
         interpret=interpret,
     )(xa, fsq, fd)
+
+
+# ---------------------------------------------------------------------------
+# Accumulating variants: chunk k of a streamed fit folds into the running
+# (G, M) — the accumulators are INPUTS aliased onto the outputs
+# (``input_output_aliases``), so each chunk is one HBM pass with no separate
+# XLA add and no re-zeroing of the [o, m, m] buffer.  Value correctness does
+# not rely on the aliasing (the kernel explicitly seeds the output block from
+# the input refs at the first n tile); aliasing is the memory/bandwidth win.
+# ---------------------------------------------------------------------------
+
+def _kernel_acc(g_in_ref, m_in_ref, x_ref, fsq_ref, fd_ref, g_ref, m_ref):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _seed():
+        g_ref[...] = g_in_ref[...]
+        m_ref[...] = m_in_ref[...]
+
+    x = x_ref[...]                       # [m, bn]
+    fsq = fsq_ref[...]                   # [1, bn]
+    fd = fd_ref[...]                     # [1, bn]
+    scaled = x * fsq                     # VPU
+    g_ref[0] += jax.lax.dot_general(
+        scaled, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] += jax.lax.dot_general(
+        x, fd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).T
+
+
+def rolann_stats_kernel_acc(
+    g: jnp.ndarray,        # [o, m, m] running Gram accumulator
+    mv: jnp.ndarray,       # [o, m]    running M accumulator
+    xa: jnp.ndarray,       # [m, n]    this chunk
+    fsq: jnp.ndarray,      # [o, n]
+    fd: jnp.ndarray,       # [o, n]
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Fold one sample chunk into running stats: returns (g + ΔG, mv + ΔM)."""
+    m, n = xa.shape
+    o = fsq.shape[0]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+
+    return pl.pallas_call(
+        _kernel_acc,
+        grid=(o, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, m, m), lambda oi, ni: (oi, 0, 0)),
+            pl.BlockSpec((1, m), lambda oi, ni: (oi, 0)),
+            pl.BlockSpec((m, block_n), lambda oi, ni: (0, ni)),
+            pl.BlockSpec((1, block_n), lambda oi, ni: (oi, ni)),
+            pl.BlockSpec((1, block_n), lambda oi, ni: (oi, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, m), lambda oi, ni: (oi, 0, 0)),
+            pl.BlockSpec((1, m), lambda oi, ni: (oi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((o, m, m), jnp.float32),
+            jax.ShapeDtypeStruct((o, m), jnp.float32),
+        ],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(g, mv, xa, fsq, fd)
+
+
+def _kernel_acc_batched(g_in_ref, m_in_ref, x_ref, fsq_ref, fd_ref, g_ref, m_ref):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _seed():
+        g_ref[...] = g_in_ref[...]
+        m_ref[...] = m_in_ref[...]
+
+    x = x_ref[0]                         # [m, bn]
+    fsq = fsq_ref[0]                     # [1, bn]
+    fd = fd_ref[0]                       # [1, bn]
+    scaled = x * fsq                     # VPU
+    g_ref[0, 0] += jax.lax.dot_general(
+        scaled, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0] += jax.lax.dot_general(
+        x, fd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).T
+
+
+def rolann_stats_kernel_acc_batched(
+    g: jnp.ndarray,        # [k, o, m, m]
+    mv: jnp.ndarray,       # [k, o, m]
+    xa: jnp.ndarray,       # [k, m, n]
+    fsq: jnp.ndarray,      # [k, o, n]
+    fd: jnp.ndarray,       # [k, o, n]
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Tenant-batched accumulating fold: one launch for a whole fleet chunk."""
+    k, m, n = xa.shape
+    o = fsq.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+
+    return pl.pallas_call(
+        _kernel_acc_batched,
+        grid=(k, o, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, m), lambda ki, oi, ni: (ki, oi, 0, 0)),
+            pl.BlockSpec((1, 1, m), lambda ki, oi, ni: (ki, oi, 0)),
+            pl.BlockSpec((1, m, block_n), lambda ki, oi, ni: (ki, 0, ni)),
+            pl.BlockSpec((1, 1, block_n), lambda ki, oi, ni: (ki, oi, ni)),
+            pl.BlockSpec((1, 1, block_n), lambda ki, oi, ni: (ki, oi, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, m, m), lambda ki, oi, ni: (ki, oi, 0, 0)),
+            pl.BlockSpec((1, 1, m), lambda ki, oi, ni: (ki, oi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, o, m, m), jnp.float32),
+            jax.ShapeDtypeStruct((k, o, m), jnp.float32),
+        ],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(g, mv, xa, fsq, fd)

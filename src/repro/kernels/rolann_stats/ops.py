@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.kernels.rolann_stats.kernel import (
     rolann_stats_kernel,
+    rolann_stats_kernel_acc,
+    rolann_stats_kernel_acc_batched,
     rolann_stats_kernel_batched,
 )
 from repro.kernels.rolann_stats.ref import rolann_stats_ref
@@ -138,4 +140,114 @@ def rolann_stats_batched(
     )
 
 
-__all__ = ["rolann_stats", "rolann_stats_batched", "rolann_stats_ref", "next_pow2"]
+# ---------------------------------------------------------------------------
+# Accumulating variants — streamed/chunked fits fold each chunk into running
+# (G, M) accumulators.  The accumulators are aliased onto the kernel outputs
+# (no separate XLA add, no re-zeroing); callers that hold the running stats
+# in a scan carry or a donated jit argument reuse the buffer in place.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _rolann_stats_acc(g, mv, xa, fsq, fd, *, block_n: int, interpret: bool):
+    m, n = xa.shape
+    o = fsq.shape[0]
+    if n == 0 or m == 0 or o == 0:
+        return g, mv
+    out_dtype = g.dtype
+    block_n = _resolve_block_n(n, block_n)
+    pad = (-n) % block_n
+    if pad:
+        xa = jnp.pad(xa, ((0, 0), (0, pad)))
+        fsq = jnp.pad(fsq, ((0, 0), (0, pad)))
+        fd = jnp.pad(fd, ((0, 0), (0, pad)))
+    g, mv = rolann_stats_kernel_acc(
+        g.astype(jnp.float32),
+        mv.astype(jnp.float32),
+        xa.astype(jnp.float32),
+        fsq.astype(jnp.float32),
+        fd.astype(jnp.float32),
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return g.astype(out_dtype), mv.astype(out_dtype)
+
+
+def rolann_stats_acc(
+    g: jnp.ndarray,
+    mv: jnp.ndarray,
+    xa: jnp.ndarray,
+    fsq: jnp.ndarray,
+    fd: jnp.ndarray,
+    *,
+    block_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Fold one chunk into running stats: (g, mv) += stats(xa, fsq, fd).
+
+    g [o, m, m], mv [o, m]; xa [m, n_chunk]; fsq, fd [o, n_chunk].  The
+    kernel aliases the accumulators onto its outputs; inside a compiled
+    caller (a scan carry, or a streaming step jitted with donated
+    accumulators) the fold is in place — no separate add, no re-zeroing.
+    """
+    return _rolann_stats_acc(
+        g, mv, xa, fsq, fd, block_n=block_n,
+        interpret=_resolve_interpret(interpret),
+    )
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _rolann_stats_acc_batched(g, mv, xa, fsq, fd, *, block_n: int,
+                              interpret: bool):
+    k, m, n = xa.shape
+    o = fsq.shape[1]
+    if n == 0 or m == 0 or o == 0 or k == 0:
+        return g, mv
+    out_dtype = g.dtype
+    block_n = _resolve_block_n(n, block_n)
+    pad = (-n) % block_n
+    if pad:
+        xa = jnp.pad(xa, ((0, 0), (0, 0), (0, pad)))
+        fsq = jnp.pad(fsq, ((0, 0), (0, 0), (0, pad)))
+        fd = jnp.pad(fd, ((0, 0), (0, 0), (0, pad)))
+    g, mv = rolann_stats_kernel_acc_batched(
+        g.astype(jnp.float32),
+        mv.astype(jnp.float32),
+        xa.astype(jnp.float32),
+        fsq.astype(jnp.float32),
+        fd.astype(jnp.float32),
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return g.astype(out_dtype), mv.astype(out_dtype)
+
+
+def rolann_stats_acc_batched(
+    g: jnp.ndarray,
+    mv: jnp.ndarray,
+    xa: jnp.ndarray,
+    fsq: jnp.ndarray,
+    fd: jnp.ndarray,
+    *,
+    block_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Tenant-batched accumulating fold: g [k, o, m, m], xa [k, m, n_chunk].
+
+    One kernel launch folds a whole fleet's chunk into the running per-tenant
+    stats — the streamed fleet fit reaches this through the ``custom_vmap``
+    rule on ``stats_backend.gram_stats_acc``.
+    """
+    return _rolann_stats_acc_batched(
+        g, mv, xa, fsq, fd, block_n=block_n,
+        interpret=_resolve_interpret(interpret),
+    )
+
+
+__all__ = [
+    "rolann_stats",
+    "rolann_stats_acc",
+    "rolann_stats_acc_batched",
+    "rolann_stats_batched",
+    "rolann_stats_ref",
+    "next_pow2",
+]

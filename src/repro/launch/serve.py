@@ -55,6 +55,7 @@ def run_fleet(args) -> None:
             tenants=k,
             mesh_devices=args.mesh_tenants or None,
             stats_backend=args.stats_backend,
+            chunk_samples=args.chunk_samples or None,
         )
         engine = DAEFEngine(cfg, plan)
     except PlanError as e:  # bad mesh sizes etc. -> clean CLI error
@@ -66,14 +67,27 @@ def run_fleet(args) -> None:
               f"{fleet_sharded.TENANT_AXIS}' mesh axis ({k // d} per device)")
 
     t0 = time.perf_counter()
-    # Mesh plans place the host-built batch BY SHARDING: each device pulls
-    # only its K/D tenant slice, never a full replicated copy.
-    fl = engine.fit(xs_train, seeds=jnp.arange(k))
+    if args.chunk_samples:
+        # Streaming plan: the host iterator feeds fixed-shape [K, m0, chunk]
+        # chunks into the engine — the training data never sits on device as
+        # one array (chunked plans also stream engine.fit; fit_stream is the
+        # data-never-fits-at-once entry point).
+        c = args.chunk_samples
+        fl = engine.fit_stream(
+            lambda: (xs_train[:, :, i:i + c] for i in range(0, n_train, c)),
+            seeds=jnp.arange(k),
+        )
+        how = f"streamed in {c}-sample chunks"
+    else:
+        # Mesh plans place the host-built batch BY SHARDING: each device
+        # pulls only its K/D tenant slice, never a full replicated copy.
+        fl = engine.fit(xs_train, seeds=jnp.arange(k))
+        how = "in one dispatch"
     jax.block_until_ready(fl.model.train_errors)
     t_fit = time.perf_counter() - t0
     mus = engine.thresholds(fl, rule="q90")
     print(f"fleet: trained {k} tenant models [{m0} features, {n_train} samples] "
-          f"in one dispatch ({t_fit:.2f}s incl. JIT)")
+          f"{how} ({t_fit:.2f}s incl. JIT)")
 
     # Serving loop: ragged tenant request batches, padded to n_pad, one
     # dispatch per round.
@@ -138,6 +152,11 @@ def main() -> None:
                          "$REPRO_STATS_BACKEND or einsum; 'fused' routes "
                          "training stats through the Pallas rolann_stats "
                          "kernel — interpret mode on CPU)")
+    ap.add_argument("--chunk-samples", type=int, default=0,
+                    help="fleet mode: train with a streaming (chunked) "
+                         "ExecutionPlan — per-layer Gram stats accumulate "
+                         "over sample chunks of this width via "
+                         "engine.fit_stream, bounding training memory")
     args = ap.parse_args()
 
     if args.fleet < 0:
@@ -148,6 +167,10 @@ def main() -> None:
         ap.error("--mesh-tenants only applies to --fleet mode")
     if args.stats_backend and not args.fleet:
         ap.error("--stats-backend only applies to --fleet mode")
+    if args.chunk_samples and not args.fleet:
+        ap.error("--chunk-samples only applies to --fleet mode")
+    if args.chunk_samples < 0:
+        ap.error(f"--chunk-samples must be >= 1, got {args.chunk_samples}")
     if args.fleet and args.rounds < 1:
         ap.error(f"--rounds must be >= 1, got {args.rounds}")
     if args.fleet:

@@ -11,6 +11,8 @@ from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
 from repro.kernels.rolann_stats import (
     rolann_stats,
+    rolann_stats_acc,
+    rolann_stats_acc_batched,
     rolann_stats_batched,
     rolann_stats_ref,
 )
@@ -133,6 +135,121 @@ def test_rolann_stats_degenerate_shapes():
         jnp.zeros((0, 3, 16)), jnp.zeros((0, 2, 16)), jnp.zeros((0, 2, 16))
     )
     assert g.shape == (0, 2, 3, 3) and mv.shape == (0, 2, 3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=24),
+    n=st.integers(min_value=8, max_value=300),
+    o=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_rolann_stats_acc_shape_sweep(m, n, o, seed):
+    """The accumulating kernel == running stats + the einsum oracle of the
+    chunk (the streamed fit's per-chunk fold)."""
+    rng = np.random.default_rng(seed)
+    g0 = jnp.asarray(rng.normal(size=(o, m, m)), jnp.float32)
+    m0 = jnp.asarray(rng.normal(size=(o, m)), jnp.float32)
+    xa = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.05, 1.0, size=(o, n)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(o, n)), jnp.float32)
+    g, mv = rolann_stats_acc(g0, m0, xa, fsq, fd, block_n=128)
+    gr, mr = rolann_stats_ref(xa, fsq, fd)
+    scale = max(1.0, float(jnp.abs(gr).max()))
+    np.testing.assert_allclose(g, g0 + gr, atol=2e-4 * scale)
+    np.testing.assert_allclose(mv, m0 + mr, atol=2e-4 * scale)
+
+
+def test_rolann_stats_acc_batched_vs_oracle():
+    """One batched accumulating launch == the per-tenant oracle fold."""
+    rng = np.random.default_rng(5)
+    k, m, o, n = 3, 6, 2, 200
+    g0 = jnp.asarray(rng.normal(size=(k, o, m, m)), jnp.float32)
+    m0 = jnp.asarray(rng.normal(size=(k, o, m)), jnp.float32)
+    xa = jnp.asarray(rng.normal(size=(k, m, n)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.1, 1, (k, o, n)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(k, o, n)), jnp.float32)
+    g, mv = rolann_stats_acc_batched(g0, m0, xa, fsq, fd, block_n=128)
+    gr, mr = jax.vmap(rolann_stats_ref)(xa, fsq, fd)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0 + gr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(m0 + mr), atol=1e-4)
+
+
+def test_gram_stats_acc_vmap_dispatches_batched(monkeypatch):
+    """vmapping the accumulating fold (the fleet's tenant axis) must lower
+    to ONE tenant-batched dispatch via the custom_vmap rule — for the fused
+    backend a single `rolann_stats_acc_batched` launch — and agree with the
+    per-tenant loop for both backends."""
+    from repro.core import stats_backend
+
+    calls = []
+    orig = stats_backend.gram_stats_acc_batched
+
+    def spy(g, m, xa, fsq, fd, *, backend=None):
+        calls.append((tuple(xa.shape), backend))
+        return orig(g, m, xa, fsq, fd, backend=backend)
+
+    monkeypatch.setattr(stats_backend, "gram_stats_acc_batched", spy)
+    stats_backend._gram_stats_acc_fn.cache_clear()
+    rng = np.random.default_rng(6)
+    k, m, o, n = 4, 5, 3, 64
+    g0 = jnp.asarray(rng.normal(size=(k, o, m, m)), jnp.float32)
+    m0 = jnp.asarray(rng.normal(size=(k, o, m)), jnp.float32)
+    xa = jnp.asarray(rng.normal(size=(k, m, n)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.1, 1, (k, o, n)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(k, o, n)), jnp.float32)
+    try:
+        for backend in stats_backend.BACKENDS:
+            calls.clear()
+            g, mv = jax.vmap(
+                lambda a, b, c, d, e: stats_backend.gram_stats_acc(
+                    a, b, c, d, e, backend=backend
+                )
+            )(g0, m0, xa, fsq, fd)
+            assert calls, f"{backend}: batched accumulator was not dispatched"
+            assert calls[0] == ((k, m, n), backend)
+            for i in range(k):
+                gi, mi = stats_backend.gram_stats_acc(
+                    g0[i], m0[i], xa[i], fsq[i], fd[i], backend=backend
+                )
+                np.testing.assert_allclose(np.asarray(g[i]), np.asarray(gi),
+                                           atol=1e-5, rtol=1e-5)
+                np.testing.assert_allclose(np.asarray(mv[i]), np.asarray(mi),
+                                           atol=1e-5, rtol=1e-5)
+    finally:
+        stats_backend._gram_stats_acc_fn.cache_clear()
+
+
+def test_rolann_stats_acc_scan_carry_and_dtype():
+    """The fold composes over a lax.scan carry (the chunked fit's shape) and
+    returns the accumulator dtype; degenerate empty chunks are identity."""
+    rng = np.random.default_rng(7)
+    o, m, n_chunk, steps = 2, 5, 32, 4
+    xa = jnp.asarray(rng.normal(size=(steps, m, n_chunk)), jnp.float32)
+    fsq = jnp.asarray(rng.uniform(0.1, 1, (steps, o, n_chunk)), jnp.float32)
+    fd = jnp.asarray(rng.normal(size=(steps, o, n_chunk)), jnp.float32)
+
+    def step(carry, inp):
+        g, mv = carry
+        x, fs, f = inp
+        return rolann_stats_acc(g, mv, x, fs, f), None
+
+    init = (jnp.zeros((o, m, m)), jnp.zeros((o, m)))
+    (g, mv), _ = jax.lax.scan(step, init, (xa, fsq, fd))
+    gr, mr = rolann_stats_ref(
+        jnp.concatenate(list(xa), axis=-1),
+        jnp.concatenate(list(fsq), axis=-1),
+        jnp.concatenate(list(fd), axis=-1),
+    )
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(mr), atol=1e-4)
+    assert g.dtype == jnp.float32 and mv.dtype == jnp.float32
+
+    ge, me = rolann_stats_acc(
+        g, mv, jnp.zeros((m, 0)), jnp.zeros((o, 0)), jnp.zeros((o, 0))
+    )
+    np.testing.assert_array_equal(np.asarray(ge), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(me), np.asarray(mv))
 
 
 def test_next_pow2():

@@ -1,3 +1,4 @@
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -76,6 +77,143 @@ def test_merge_factors_list_matches_pairwise():
     w1, b1 = rolann.solve(merged_list, 0.1)
     w2, b2 = rolann.solve(merged_pair, 0.1)
     np.testing.assert_allclose(w1, w2, atol=2e-3)
+
+
+def test_merge_factors_list_shared_f():
+    """Regression for the collapsed shared_f branch: a linear activation
+    produces shared-F factors (2-D u), and the aggregator-style list merge
+    must match both the pairwise reduction and the full-data factors."""
+    x, _ = _data(n=240)
+    rng = np.random.default_rng(4)
+    d = jnp.asarray(rng.normal(size=(3, 240)), jnp.float32)
+    act = activations.get("linear")
+    parts = [
+        rolann.compute_factors(x[:, i * 80:(i + 1) * 80],
+                               d[:, i * 80:(i + 1) * 80], act)
+        for i in range(3)
+    ]
+    assert parts[0].shared_f
+    merged = rolann.merge_factors_list(parts)
+    assert merged.shared_f and merged.u.ndim == 2
+    pair = rolann.merge_factors(rolann.merge_factors(parts[0], parts[1]),
+                                parts[2])
+    full = rolann.compute_factors(x, d, act)
+    w_m, b_m = rolann.solve(merged, 0.1)
+    for other in (pair, full):
+        w_o, b_o = rolann.solve(other, 0.1)
+        np.testing.assert_allclose(np.asarray(w_m), np.asarray(w_o), atol=2e-3)
+        np.testing.assert_allclose(np.asarray(b_m), np.asarray(b_o), atol=2e-3)
+
+
+def test_merge_factors_list_rejects_mixed_layouts():
+    x, d = _data()
+    lin = rolann.compute_factors(x, d, activations.get("linear"))
+    per = rolann.compute_factors(x, d, activations.get("logsig"))
+    with pytest.raises(ValueError, match="shared-F"):
+        rolann.merge_factors_list([lin, per])
+
+
+# ---------------------------------------------------------------------------
+# gram solvers: Cholesky fast path vs the eigh route
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act_name", ["linear", "logsig"])
+def test_solve_chol_matches_eigh(act_name):
+    """The direct Cholesky solve (default) == the eigh factorization route
+    at test_parity tolerances, for shared-F and per-output Grams."""
+    x, d = _data()
+    if act_name == "linear":
+        rng = np.random.default_rng(2)
+        d = jnp.asarray(rng.normal(size=(3, 200)), jnp.float32)
+    act = activations.get(act_name)
+    stats = rolann.compute_stats(x, d, act)
+    for lam in (0.01, 0.3, 5.0):
+        w_c, b_c = rolann.solve(stats, lam)  # default: "chol"
+        w_e, b_e = rolann.solve(stats, lam, gram_solver="eigh")
+        w_a, b_a = rolann.solve(stats, lam, gram_solver="auto")
+        np.testing.assert_allclose(np.asarray(w_c), np.asarray(w_e),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(b_c), np.asarray(b_e),
+                                   atol=1e-4, rtol=1e-4)
+        # auto takes the (finite) Cholesky branch bit-for-bit
+        np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_c))
+        np.testing.assert_array_equal(np.asarray(b_a), np.asarray(b_c))
+
+
+def test_solve_auto_rescues_near_singular_gram():
+    """A Gram scaled until float32 Cholesky breaks down (lam ~ eps * ||G||)
+    must fall back to the clamped-eigh route under gram_solver='auto' and
+    stay finite, while 'chol' is allowed to produce non-finite output."""
+    rng = np.random.default_rng(0)
+    m = 6
+    u = np.linalg.qr(rng.normal(size=(m, m)))[0]
+    evals = np.array([1e12, 1e10, 1.0, 1e-2, 0.0, 0.0], np.float32)
+    g = (u * evals) @ u.T
+    stats = rolann.RolannStats(
+        g=jnp.asarray(g[None], jnp.float32),
+        m=jnp.asarray(rng.normal(size=(1, m)), jnp.float32),
+    )
+    lam = 1e-30  # vanishing regularizer: G + lam I numerically singular
+    w_a, b_a = rolann.solve(stats, lam, gram_solver="auto")
+    w_e, b_e = rolann.solve(stats, lam, gram_solver="eigh")
+    assert bool(jnp.isfinite(w_a).all()) and bool(jnp.isfinite(b_a).all())
+    np.testing.assert_allclose(np.asarray(w_a), np.asarray(w_e), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_a), np.asarray(b_e), rtol=1e-5)
+
+
+def test_solve_rejects_unknown_gram_solver():
+    x, d = _data()
+    stats = rolann.compute_stats(x, d, activations.get("logsig"))
+    with pytest.raises(ValueError, match="gram_solver"):
+        rolann.solve(stats, 0.1, gram_solver="lu")
+
+
+def test_solve_chol_under_vmap():
+    """The Cholesky path is the fleet hot path: it must vmap cleanly over a
+    leading batch axis and match the per-item solve."""
+    act = activations.get("logsig")
+    xs = [_data(seed=s)[0] for s in range(3)]
+    ds = [_data(seed=s)[1] for s in range(3)]
+    stats = jax.tree.map(
+        lambda *leaves: jnp.stack(leaves),
+        *[rolann.compute_stats(x, d, act) for x, d in zip(xs, ds)],
+    )
+    w_v, b_v = jax.vmap(lambda s: rolann.solve(s, 0.2))(stats)
+    for i, (x, d) in enumerate(zip(xs, ds)):
+        w_i, b_i = rolann.solve(rolann.compute_stats(x, d, act), 0.2)
+        np.testing.assert_allclose(np.asarray(w_v[i]), np.asarray(w_i),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(b_v[i]), np.asarray(b_i),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_accumulate_stats_matches_merge_of_compute():
+    """accumulate_stats == merge_stats(base, compute_stats(chunk)) for both
+    Gram layouts, including masked padding columns."""
+    x, d = _data(n=64)
+    for act_name in ("logsig", "linear"):
+        act = activations.get(act_name)
+        if act_name == "linear":
+            rng = np.random.default_rng(3)
+            d = jnp.asarray(rng.normal(size=(3, 64)), jnp.float32)
+        base = rolann.compute_stats(x[:, :40], d[:, :40], act)
+        ref = rolann.merge_stats(
+            base, rolann.compute_stats(x[:, 40:], d[:, 40:], act)
+        )
+        # pad the 24-sample chunk to 32 with garbage; mask must remove it
+        xc = jnp.pad(x[:, 40:], ((0, 0), (0, 8)), constant_values=3.3)
+        dc = jnp.pad(d[:, 40:], ((0, 0), (0, 8)), constant_values=0.5)
+        mask = (jnp.arange(32) < 24).astype(jnp.float32)
+        got = rolann.accumulate_stats(base, xc, dc, act, weights=mask)
+        np.testing.assert_allclose(np.asarray(got.g), np.asarray(ref.g),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(got.m), np.asarray(ref.m),
+                                   atol=1e-4, rtol=1e-4)
+        zero = rolann.init_stats(x.shape[0], d.shape[0], act, jnp.float32)
+        full = rolann.accumulate_stats(zero, x, d, act)
+        one = rolann.compute_stats(x, d, act)
+        np.testing.assert_allclose(np.asarray(full.g), np.asarray(one.g),
+                                   atol=1e-4, rtol=1e-4)
 
 
 def test_factor_stat_roundtrip():
