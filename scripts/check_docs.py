@@ -1,0 +1,109 @@
+"""Documentation integrity checker (the CI ``docs`` job).
+
+Two passes over ``README.md`` + every ``docs/*.md``:
+
+1. **Link check** — every relative markdown link/image target must exist on
+   disk (anchors and absolute URLs are skipped; so are targets that resolve
+   outside the repo, e.g. the CI badge's ``../../actions/...`` which only
+   exists on the forge).
+2. **Snippet execution** — every fenced block tagged ```` ```python run ````
+   is executed, blocks within one file sharing a namespace (so a later
+   example can build on an earlier one, exactly as a reader would run
+   them).  Plain ```` ```python ```` blocks are illustrative and skipped.
+
+Run locally:  PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\S*)[ \t]*(\S*)[ \t]*$")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO_ROOT / "README.md"]
+    files += sorted((REPO_ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: Path) -> list[str]:
+    failures = []
+    # Strip fenced code blocks first: link syntax inside code is not a link.
+    text, in_fence = [], False
+    for line in path.read_text().splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            text.append(line)
+    for target in LINK_RE.findall("\n".join(text)):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.is_relative_to(REPO_ROOT):
+            continue  # forge-relative (e.g. the CI badge), not a repo file
+        if not resolved.exists():
+            failures.append(f"{path.relative_to(REPO_ROOT)}: broken link "
+                            f"-> {target}")
+    return failures
+
+
+def runnable_blocks(path: Path) -> list[tuple[int, str]]:
+    """(start_line, source) for every ```python run fenced block."""
+    blocks, buf, start, in_run = [], [], 0, False
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = FENCE_RE.match(line)
+        if m and not in_run and m.group(1) == "python" and m.group(2) == "run":
+            in_run, buf, start = True, [], i + 1
+        elif m and in_run:
+            blocks.append((start, "\n".join(buf)))
+            in_run = False
+        elif in_run:
+            buf.append(line)
+    return blocks
+
+
+def run_snippets(path: Path) -> list[str]:
+    failures = []
+    namespace: dict = {"__name__": f"docsnippet:{path.name}"}
+    for start, src in runnable_blocks(path):
+        label = f"{path.relative_to(REPO_ROOT)}:{start}"
+        try:
+            code = compile(src, label, "exec")
+            exec(code, namespace)  # noqa: S102 - executing our own docs
+            print(f"  ran  {label}")
+        except Exception as e:  # noqa: BLE001 - report and keep checking
+            failures.append(f"{label}: snippet raised "
+                            f"{type(e).__name__}: {e}")
+    return failures
+
+
+def main() -> int:
+    failures = []
+    files = doc_files()
+    if len(files) < 2:
+        failures.append("expected README.md plus docs/*.md, found "
+                        f"{[str(f) for f in files]}")
+    for path in files:
+        print(f"checking {path.relative_to(REPO_ROOT)}")
+        failures += check_links(path)
+        failures += run_snippets(path)
+    if failures:
+        print(f"\nFAIL ({len(failures)}):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nOK: {len(files)} files link-checked, snippets executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

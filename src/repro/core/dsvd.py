@@ -94,6 +94,28 @@ def truncate(f: SvdFactors, rank: int) -> SvdFactors:
     return SvdFactors(u=f.u[:, :rank], s=f.s[:rank])
 
 
+def pad_rank(f: SvdFactors, rank: int) -> SvdFactors:
+    """Zero-pad (u, s) with trailing zero factors up to ``rank``.
+
+    Exact under both merge algebras: zero singular values contribute nothing
+    to the concat-SVD (Eq. 2/8) and leave ``U S^2 U^T`` unchanged.  This is
+    how ragged local factorizations (r = min(m, n_p) varies with the local
+    sample count) become stackable into one fixed-shape batch — e.g. the
+    async federation ledger, where site states must share a shape to ride
+    the masked on-mesh tree reduction.
+    """
+    r = f.s.shape[-1]
+    if r > rank:
+        raise ValueError(
+            f"cannot pad rank {r} down to {rank} — use dsvd.truncate"
+        )
+    if r == rank:
+        return f
+    pad_u = [(0, 0)] * (f.u.ndim - 1) + [(0, rank - r)]
+    pad_s = [(0, 0)] * (f.s.ndim - 1) + [(0, rank - r)]
+    return SvdFactors(u=jnp.pad(f.u, pad_u), s=jnp.pad(f.s, pad_s))
+
+
 def dsvd(
     partitions: Sequence[Array],
     rank: int,

@@ -172,6 +172,32 @@ def _federated_fit(
     )
 
 
+def merge_exchange_states(config: daef.DAEFConfig, states: Sequence[tuple]):
+    """Left-to-right reduce of federated exchange states on the host.
+
+    Each state is the ``(encoder_factors, layer_knowledge, train_errors)``
+    triple a site would publish (`daef.merge_knowledge` output / the tuple
+    the tree reduction threads).  Merging the states and re-solving ONCE
+    (`daef._model_from_knowledge`) matches the sequential
+    ``functools.reduce(daef.merge_models, ...)`` chain up to float error —
+    the weight solves in that chain never feed back into the knowledge.
+
+    This is the refresh path of the async `FederationSession` for
+    ``merge="sequential"``/``"pairwise"`` plans: unlike the on-mesh masked
+    tree it handles rank-ragged factor knowledge (``method="svd"``) and any
+    state count.
+    """
+    if not states:
+        raise ValueError("merge_exchange_states: empty state list")
+    merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
+    enc, knw, _ = states[0]
+    for enc_b, knw_b, _ in states[1:]:
+        enc = dsvd.merge_pair(enc, enc_b)
+        knw = tuple(merge(ka, kb) for ka, kb in zip(knw, knw_b))
+    errs = jnp.concatenate([jnp.asarray(e) for _, _, e in states])
+    return enc, knw, errs
+
+
 def _aggregate(items: list, use_gram: bool):
     if use_gram:
         agg = items[0]

@@ -285,14 +285,26 @@ def sharded_fleet_partial_fit(
 # Cross-device tree-reduce federation
 # ---------------------------------------------------------------------------
 
-def _merge_pair_state(config: daef.DAEFConfig):
-    """Pairwise merge on the exchanged state (enc factors, knowledge, errors)
-    — `daef.merge_knowledge` lifted to the tuple the reduction threads."""
+def _merge_pair_knowledge(config: daef.DAEFConfig):
+    """Pairwise merge on (enc factors, knowledge) — the fixed-shape part of
+    the exchanged state, shared by both tree kernels."""
     merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
 
     def pair(a, b):
         enc = dsvd.merge_pair(a[0], b[0])
         knw = tuple(merge(ka, kb) for ka, kb in zip(a[1], b[1]))
+        return enc, knw
+
+    return pair
+
+
+def _merge_pair_state(config: daef.DAEFConfig):
+    """Pairwise merge on the exchanged state (enc factors, knowledge, errors)
+    — `daef.merge_knowledge` lifted to the tuple the reduction threads."""
+    pair_k = _merge_pair_knowledge(config)
+
+    def pair(a, b):
+        enc, knw = pair_k((a[0], a[1]), (b[0], b[1]))
         errs = jnp.concatenate([a[2], b[2]])
         return enc, knw, errs
 
@@ -424,12 +436,28 @@ def fleet_merge_tree(
     compatible all-device tenant mesh).  Constraints: K and group_size must
     tile the mesh — K % D == 0 and the per-shard tenant count must divide,
     or be divisible by, group_size (automatic for powers of two).
+
+    ``group_size`` MUST be a power of two — the butterfly pairs rank ``d``
+    with ``d ^ 2^r``, which only tiles aligned power-of-two blocks.  All
+    constraint violations raise ``ValueError`` here, before the shard_map.
+    For other group sizes use ``DAEFEngine.reduce`` with
+    ``merge='sequential'``; for a SUBSET of participants pad to a power of
+    two and reduce the masked states with `merge_state_tree`.
     """
-    k = fl.size
     if group_size < 1 or (group_size & (group_size - 1)):
-        raise ValueError(f"group_size must be a positive power of two, got {group_size}")
+        raise ValueError(
+            f"fleet_merge_tree: group_size must be a positive power of two "
+            f"(the butterfly exchanges partner d ^ 2^r each round), got "
+            f"{group_size} — pad each group to the next power of two with "
+            "zero-masked slots and reduce via merge_state_tree, or use "
+            "DAEFEngine.reduce with merge='sequential' (any group size)"
+        )
+    k = fl.size
     if k % group_size:
-        raise ValueError(f"group_size {group_size} must divide fleet size {k}")
+        raise ValueError(
+            f"fleet_merge_tree: group_size {group_size} must divide the "
+            f"fleet size {k}"
+        )
     _validate_groups(fl, group_size)
     if group_size == 1:
         return fl
@@ -469,3 +497,144 @@ def fleet_merge_tree(
         # representative per group (a compiled strided slice, still on-mesh).
         merged = _every_nth(merged, 1 << cross_rounds)
     return merged
+
+
+# ---------------------------------------------------------------------------
+# Masked subset tree-reduce — partial participation on the same butterfly
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _state_tree_fn(config: daef.DAEFConfig, mesh: Mesh, local_rounds: int,
+                   cross_rounds: int):
+    """Build (and cache) the jitted shard_map state-reduction kernel: the
+    `_merge_tree_fn` butterfly over (enc factors, knowledge) only — no
+    per-slot weight solve, no error pool (both live with the caller)."""
+    n_dev = mesh.shape[TENANT_AXIS]
+    pair = _merge_pair_knowledge(config)
+
+    def body(enc, knowledge):
+        state = (enc, knowledge)
+        for _ in range(local_rounds):
+            even = jax.tree.map(lambda leaf: leaf[0::2], state)
+            odd = jax.tree.map(lambda leaf: leaf[1::2], state)
+            state = jax.vmap(pair)(even, odd)
+        if cross_rounds:
+            me = lax.axis_index(TENANT_AXIS)
+            for r in range(cross_rounds):
+                shift = 1 << r
+                perm = [(d, d ^ shift) for d in range(n_dev)]
+                other = jax.tree.map(
+                    lambda leaf: lax.ppermute(leaf, TENANT_AXIS, perm), state
+                )
+                lower_first = (me & shift) == 0
+                a = jax.tree.map(
+                    lambda x, y: jnp.where(lower_first, x, y), state, other
+                )
+                b = jax.tree.map(
+                    lambda x, y: jnp.where(lower_first, y, x), state, other
+                )
+                state = jax.vmap(pair)(a, b)
+        return state
+
+    spec = P(TENANT_AXIS)
+    fn = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=spec,
+        axis_names={TENANT_AXIS},
+        check_vma=False,  # butterfly output is replicated, specs say sharded
+    )
+    return jax.jit(fn)
+
+
+def merge_state_tree(
+    config: daef.DAEFConfig,
+    enc: dsvd.SvdFactors,
+    knowledge: tuple,
+    mask,
+    *,
+    mesh: Mesh | None = None,
+) -> tuple[dsvd.SvdFactors, tuple]:
+    """Tree-reduce a stacked batch of federated states over a SUBSET mask.
+
+    This is `fleet_merge_tree`'s butterfly generalized to partial
+    participation: ``enc`` / ``knowledge`` carry a leading slot axis of S
+    stacked site states (S a power of two — pad with arbitrary slots and
+    zero their mask entries), and ``mask`` ([S] in {0, 1}) selects who
+    participates.  Masked slots are scaled to the merge identity
+    (`rolann.mask_knowledge` / zeroed encoder singular values) BEFORE the
+    reduction, so the fixed-shape butterfly needs no data-dependent control
+    flow: excluded sites ride along as no-ops.  This is how the async
+    `FederationSession` folds whichever sites are fresh on a mesh without a
+    participation barrier.
+
+    Requires ``method="gram"`` — factor-form knowledge is rank-ragged across
+    sites (r depends on the local sample count) and cannot stack; the host
+    paths (`federated.merge_exchange_states`) handle it instead.  Raises
+    ``ValueError`` on a non-power-of-two S or an all-zero mask.
+
+    Returns the merged ``(enc_factors, knowledge)`` with the slot axis
+    reduced away.  The caller re-solves weights once from the result
+    (`daef._model_from_knowledge`).
+    """
+    config = config.resolved()
+    if config.method != "gram":
+        raise ValueError(
+            "merge_state_tree: masked tree reduction stacks site states into "
+            "one fixed-shape batch, but method='svd' factor knowledge is "
+            "rank-ragged across sites — use the host reduce "
+            "(federated.merge_exchange_states) or method='gram'"
+        )
+    s_count = int(enc.u.shape[0])
+    if s_count < 1 or (s_count & (s_count - 1)):
+        raise ValueError(
+            f"merge_state_tree: slot count must be a positive power of two "
+            f"(the butterfly exchanges partner d ^ 2^r each round), got "
+            f"{s_count} — pad the batch with zero-masked slots"
+        )
+    mask = np.asarray(mask)
+    if mask.shape != (s_count,):
+        raise ValueError(
+            f"merge_state_tree: mask must be [{s_count}] (one entry per "
+            f"slot), got shape {mask.shape}"
+        )
+    if not mask.any():
+        raise ValueError(
+            "merge_state_tree: all slots masked out — nothing to merge "
+            "(an async refresh with no fresh sites keeps the previous model)"
+        )
+
+    w = jnp.asarray(mask, enc.u.dtype)
+    enc = dsvd.SvdFactors(u=enc.u, s=enc.s * w[:, None])
+    knowledge = tuple(rolann.mask_knowledge(k, w) for k in knowledge)
+
+    if mesh is None:
+        d, avail = 1, len(jax.devices())
+        while d * 2 <= avail and s_count % (d * 2) == 0:
+            d *= 2
+        mesh = tenant_mesh(d)
+    if TENANT_AXIS not in mesh.shape:
+        raise ValueError(f"mesh has no '{TENANT_AXIS}' axis: {mesh.axis_names}")
+    d = mesh.shape[TENANT_AXIS]
+    if s_count % d:
+        raise ValueError(
+            f"merge_state_tree: slot count {s_count} must divide evenly over "
+            f"the {d}-device '{TENANT_AXIS}' mesh axis"
+        )
+    local = s_count // d
+    if local & (local - 1) or d & (d - 1):
+        raise ValueError(
+            f"merge_state_tree: per-device slot count {local} and device "
+            f"count {d} must both be powers of two"
+        )
+    local_rounds = local.bit_length() - 1
+    cross_rounds = d.bit_length() - 1
+
+    spec = tenant_sharding(mesh)
+    enc = jax.tree.map(lambda leaf: jax.device_put(leaf, spec), enc)
+    knowledge = jax.tree.map(lambda leaf: jax.device_put(leaf, spec), knowledge)
+    fn = _state_tree_fn(config, mesh, local_rounds, cross_rounds)
+    enc_m, knw_m = fn(enc, knowledge)
+    # The root state is replicated across the remaining slot axis; keep one.
+    return jax.tree.map(lambda leaf: leaf[0], (enc_m, knw_m))

@@ -238,6 +238,30 @@ def merge_stats(a: RolannStats, b: RolannStats) -> RolannStats:
     return RolannStats(g=a.g + b.g, m=a.m + b.m)
 
 
+def mask_knowledge(knowledge, w: Array):
+    """Scale a knowledge contribution by ``w`` (in {0, 1}).
+
+    ``w = 0`` turns the contribution into the merge IDENTITY of either
+    representation: zeroed (G, M) adds nothing to a Gram sum, and zeroed
+    singular values make the factor columns vanish from the concat-SVD
+    (Eq. 8) while M drops out of Eq. 9.  This is what lets a fixed-shape
+    tree reduction run over a SUBSET of participants — masked slots ride
+    along as no-ops (`fleet_sharded.merge_state_tree`).
+
+    ``w`` broadcasts from the left: a scalar masks one contribution, a
+    leading [S] vector masks a stacked batch of S contributions.
+    """
+    w = jnp.asarray(w)
+
+    def scale(leaf):
+        return leaf * w.reshape(w.shape + (1,) * (leaf.ndim - w.ndim))
+
+    if isinstance(knowledge, RolannStats):
+        return RolannStats(g=scale(knowledge.g), m=scale(knowledge.m))
+    return RolannFactors(u=knowledge.u, s=scale(knowledge.s),
+                         m=scale(knowledge.m))
+
+
 def merge_factors(a: RolannFactors, b: RolannFactors) -> RolannFactors:
     """Paper's Eq. 8-9: SVD of the concatenated weighted factors.
 

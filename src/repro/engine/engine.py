@@ -48,10 +48,21 @@ EngineState = daef.DAEFModel | fleet.DAEFFleet
 class DAEFEngine:
     """Unified DAEF training/serving engine (see module docstring).
 
-    >>> engine = DAEFEngine(config, ExecutionPlan(mode="vmap", tenants=64))
-    >>> fl = engine.fit(xs)                       # xs [64, m0, n]
-    >>> scores = engine.scores(fl, batch, n_valid=counts)
-    >>> sites = engine.reduce(fl, group_size=2)   # per plan.merge
+    Runnable end to end (the fleet version of the README quickstart):
+
+    >>> import numpy as np
+    >>> from repro.core import daef
+    >>> from repro.engine import DAEFEngine, ExecutionPlan
+    >>> cfg = daef.DAEFConfig(layer_sizes=(8, 3, 5, 8))
+    >>> engine = DAEFEngine(cfg, ExecutionPlan(mode="vmap", tenants=4))
+    >>> xs = np.random.default_rng(0).normal(size=(4, 8, 64)).astype("float32")
+    >>> fl = engine.fit(xs)                       # one jitted fleet dispatch
+    >>> scores = engine.scores(fl, xs)            # [4, 64] reconstruction MSE
+    >>> sites = engine.reduce(fl, group_size=2)   # federate per plan.merge
+    >>> sites.size
+    2
+
+    Full API index with contracts: docs/api.md.
     """
 
     def __init__(
@@ -61,6 +72,22 @@ class DAEFEngine:
         *,
         mesh=None,
     ):
+        """Bind the math to a placement.
+
+        Args:
+            config: the DAEF formulation — layer sizes, lambdas, knowledge
+                representation (``method``), seed, gram solver.
+            plan: the placement/dispatch choice; ``None`` means the default
+                ``ExecutionPlan()`` (one model, vmap mode).
+            mesh: an explicit device mesh for ``mode="mesh"`` plans (e.g.
+                from ``launch.mesh.make_production_mesh``).  ``None`` builds
+                and caches one on first use from ``plan.mesh_devices``.
+
+        Raises:
+            PlanError: ``plan`` is not an ExecutionPlan; the plan and config
+                conflict (``chunk_samples`` with ``method="svd"``); the mesh
+                is missing a required axis or does not tile the fleet.
+        """
         plan = plan if plan is not None else ExecutionPlan()
         if not isinstance(plan, ExecutionPlan):
             raise PlanError(
@@ -233,18 +260,32 @@ class DAEFEngine:
         lam_last=None,
         n_partitions: int = 1,
     ) -> EngineState:
-        """Train under the plan.  ``x`` is [K, features, samples] for a fleet
-        (K == plan.tenants) or [features, samples] for a single model.
-
-        ``seeds`` / ``lam_hidden`` / ``lam_last`` are scalar-or-[K]
-        per-tenant overrides (fleet only); ``n_partitions`` splits samples to
-        exercise the distributed SVD/merge path (loop + vmap modes).
+        """Train under the plan — closed form, no epochs.
 
         With ``plan.chunk_samples`` set, training streams: every layer's
         statistics accumulate over sample chunks (one scan pass per layer)
         instead of materializing the full activations — same result as the
         one-shot fit within accumulation-order float error, peak memory flat
-        in the sample count."""
+        in the sample count.
+
+        Args:
+            x: ``[K, features, samples]`` for a fleet (K == plan.tenants) or
+                ``[features, samples]`` for a single model.
+            seeds, lam_hidden, lam_last: scalar-or-``[K]`` per-tenant
+                overrides (fleet batches only; single models set them on the
+                DAEFConfig).
+            n_partitions: split the sample axis to exercise the distributed
+                SVD/merge path (loop + vmap modes).
+
+        Returns:
+            A trained ``DAEFFleet`` (3-D input) or ``DAEFModel`` (2-D input),
+            placed per the plan (mesh plans shard the result).
+
+        Raises:
+            PlanError: batch shape disagrees with the plan (tenant count,
+                feature dim), per-tenant overrides on a single model, or
+                ``n_partitions`` combined with ``plan.chunk_samples``.
+        """
         cfg, plan = self.config, self.plan
         chunk = plan.chunk_samples
         if chunk is not None and n_partitions != 1:
@@ -400,7 +441,19 @@ class DAEFEngine:
         """Incremental learning: absorb a new data block (per tenant).
 
         Honors ``plan.chunk_samples``: the update block is fitted by the
-        streaming accumulator before the knowledge merge."""
+        streaming accumulator before the knowledge merge.
+
+        Args:
+            state: a trained state from ``fit``/``fit_stream``/``load``.
+            x_new: the new block, shaped like the data ``state`` was trained
+                on (``[K, features, n_new]`` / ``[features, n_new]``).
+
+        Returns:
+            The updated state: knowledge summed, weights re-solved once.
+
+        Raises:
+            PlanError: ``state`` or ``x_new`` disagrees with the plan.
+        """
         cfg, plan = self.config, self.plan
         chunk = plan.chunk_samples
         if not self._is_fleet(state, what="partial_fit"):
@@ -541,7 +594,19 @@ class DAEFEngine:
 
     def merge(self, a: EngineState, b: EngineState) -> EngineState:
         """Federated aggregation of two states trained with shared seeds
-        (tenant k of ``a`` with tenant k of ``b``)."""
+        (tenant k of ``a`` merges with tenant k of ``b``).
+
+        Args:
+            a, b: two states of the same kind (both fleets of plan.tenants,
+                or both single models) whose tenants share stage-1 seeds.
+
+        Returns:
+            The merged state: statistics added (Eq. 6-9), one re-solve.
+
+        Raises:
+            PlanError: mixed state kinds, or a fleet whose size/seed vector
+                disagrees with the plan.
+        """
         a_fleet = self._is_fleet(a, what="merge")
         b_fleet = self._is_fleet(b, what="merge")
         if a_fleet != b_fleet:
@@ -576,7 +641,17 @@ class DAEFEngine:
         * "tree"       — the on-mesh shard_map butterfly (`fleet_merge_tree`).
 
         All three agree up to float error; tenants within a group must share
-        a seed (the paper's shared-randomness requirement)."""
+        a seed (the paper's shared-randomness requirement).
+
+        Returns:
+            A ``DAEFFleet`` of K/group_size models (serve it through
+            ``engine.for_tenants(K // group_size)``).
+
+        Raises:
+            PlanError: a single model, a group size that does not divide the
+                fleet, a non-power-of-two group under "pairwise"/"tree", or
+                unequal seeds within a group.
+        """
         if not self._is_fleet(state, what="reduce"):
             raise PlanError("reduce: a single model has nothing to reduce")
         k, merge = state.size, self.plan.merge
@@ -641,7 +716,12 @@ class DAEFEngine:
         )
 
     def session(self) -> "FederationSession":
-        """A multi-round federation driver bound to this engine."""
+        """A multi-round federation driver bound to this engine.
+
+        ``plan.federation`` selects the round semantics — "sync" lockstep
+        rounds or "async" continual rounds with a versioned per-site ledger
+        and ``plan.max_staleness`` bounds (docs/federation.md has worked
+        examples of both)."""
         from repro.engine.session import FederationSession
 
         return FederationSession(self)

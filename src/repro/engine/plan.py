@@ -46,9 +46,21 @@ the choice into configuration:
                   the default chunk width expected by
                   ``DAEFEngine.fit_stream`` (host-iterator streaming for data
                   that never fits on device at once).
+* ``federation`` — round semantics of ``FederationSession``: "sync"
+                  (default — lockstep rounds: every participating site
+                  reports before any merge) or "async" (continual,
+                  barrier-free: any subset of sites may report per round; the
+                  session keeps a versioned per-site contribution ledger and
+                  refreshes the running global model from whichever sites are
+                  within the staleness bound — see docs/federation.md).
+* ``max_staleness`` — async federation only: how many refresh rounds a
+                  site's last report may lag before the site is EXCLUDED
+                  from the live model (it rejoins, with its full accumulated
+                  contribution, the next time it reports).  0 = only sites
+                  that reported in the current round count.
 
-Every future scenario (async aggregation, multi-host fleets, caching) is a
-new field here — not a sixth parallel module-level API.
+Every future scenario (multi-host fleets, caching, DP noise) is a new field
+here — not a sixth parallel module-level API.
 """
 from __future__ import annotations
 
@@ -58,6 +70,7 @@ from repro.core import stats_backend as stats_backend_mod
 
 MODES = ("loop", "vmap", "mesh")
 MERGES = ("sequential", "pairwise", "tree")
+FEDERATIONS = ("sync", "async")
 TENANT_AXES = ("tenants",)
 
 
@@ -79,6 +92,8 @@ class ExecutionPlan:
     merge: str = "sequential"
     local_factorization: str = "gram_eigh"
     chunk_samples: int | None = None
+    federation: str = "sync"
+    max_staleness: int = 0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -89,6 +104,23 @@ class ExecutionPlan:
             raise PlanError(
                 f"unknown ExecutionPlan merge {self.merge!r}: choose from "
                 f"{MERGES}"
+            )
+        if self.federation not in FEDERATIONS:
+            raise PlanError(
+                f"unknown ExecutionPlan federation {self.federation!r}: "
+                f"choose from {FEDERATIONS}"
+            )
+        if not isinstance(self.max_staleness, int) or self.max_staleness < 0:
+            raise PlanError(
+                f"max_staleness must be a non-negative int (refresh rounds a "
+                f"site may lag), got {self.max_staleness!r}"
+            )
+        if self.max_staleness and self.federation != "async":
+            raise PlanError(
+                f"max_staleness={self.max_staleness} only applies to "
+                "federation='async' (sync rounds are lockstep; every site "
+                "reports before any merge) — set federation='async' or drop "
+                "the bound"
             )
         if not isinstance(self.tenants, int) or self.tenants < 1:
             raise PlanError(f"tenants must be a positive int, got {self.tenants!r}")
@@ -160,3 +192,8 @@ class ExecutionPlan:
     def data_sharded(self) -> bool:
         """mesh mode that shards the SAMPLE axis of one model over data axes."""
         return self.mode == "mesh" and not self.tenant_sharded
+
+    @property
+    def async_federation(self) -> bool:
+        """Continual (barrier-free) FederationSession round semantics."""
+        return self.federation == "async"

@@ -2,9 +2,13 @@
 
 The paper's §4.3 scenario as a session object: every round, a set of nodes
 contributes a private partition; the session aggregates their mergeable
-sufficient statistics into ONE logical model and carries it across rounds
-(round r+1 merges into the accumulated model — the incremental-learning
-story).  The aggregation strategy comes from the plan's ``merge`` field:
+sufficient statistics into ONE logical model and carries it across rounds.
+Two round semantics exist, selected by the plan's ``federation`` field:
+
+**Sync (default, lockstep)** — ``round(parts)`` assumes every participating
+site reports before any merge; round r+1 merges into the accumulated model
+(the incremental-learning story).  The aggregation strategy comes from the
+plan's ``merge`` field:
 
 * ``merge="sequential"`` — the EXACT layer-synchronized protocol
   (subsumes `federated.federated_fit`): nodes aggregate the encoder first,
@@ -20,59 +24,157 @@ story).  The aggregation strategy comes from the plan's ``merge`` field:
   `fleet_merge_tree` shard_map butterfly (subsumes it; requires a
   power-of-two node count).
 
+**Async (``ExecutionPlan(federation="async")``, continual)** — the paper's
+statistics are additive (Eq. 6-9), so no merge ever NEEDS a barrier.  Any
+subset of sites may report per round (``round({site: x, ...})``); the
+session keeps a versioned per-site contribution ledger — each site's
+accumulated exchange state plus the refresh-clock value of its last report
+— and every round REBUILDS the live model from whichever sites are within
+``plan.max_staleness`` refreshes of the clock, with one weight re-solve
+(the existing Cholesky path).  Stale sites drop out of the live model and
+re-enter with their full accumulated contribution the moment they report
+again (delta replay is automatic: the ledger folds each new block into the
+site's running state).  ``merge`` picks the refresh reduction: host
+sequential / pairwise, or the masked on-mesh butterfly
+(`fleet_sharded.merge_state_tree`, gram method).  When all sites report
+every round with ``max_staleness=0``, the async model matches the
+sequential broker merge at test_parity tolerances (tests/
+test_async_federation.py enforces this end to end).
+
 Messages are always the privacy-safe statistics (encoder factors +
 per-layer ROLANN knowledge) — never raw data.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Mapping, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import daef, fleet, fleet_sharded
+from repro.core import daef, dsvd, fleet, fleet_sharded
 from repro.engine.plan import PlanError
 
 Array = jnp.ndarray
+
+# A site's exchange state: (encoder SvdFactors padded to rank m0, per-layer
+# ROLANN knowledge, host-side per-sample train-error pool).
+ExchangeState = tuple
+
+
+@dataclasses.dataclass
+class _SiteRecord:
+    """One async ledger entry: a site's accumulated contribution + version.
+
+    ``state`` folds every block the site ever reported (additive statistics,
+    so the fold is exact); ``version`` is the refresh-clock value at the
+    site's last report — staleness = clock - version.
+    """
+
+    state: ExchangeState
+    version: int
+    submits: int = 1
 
 
 class FederationSession:
     """Round-based federation bound to a DAEFEngine (see module docstring).
 
+    Sync (lockstep) rounds — every site reports, merged per ``plan.merge``:
+
     >>> session = engine.session()
     >>> model = session.round(parts)        # parts: per-node [m0, n_p]
     >>> model = session.round(new_parts)    # merged into the running model
+
+    Async (continual) rounds — any subset reports, keyed by site id;
+    requires ``ExecutionPlan(federation="async")``:
+
+    >>> session = engine.session()
+    >>> model = session.round({"a": xa, "b": xb})   # both sites fresh
+    >>> model = session.round({"a": xa2})           # "b" now staleness 1
+    >>> session.staleness("b")
+    1
+    >>> model = session.round({})                   # refresh only
+
+    With ``max_staleness=0`` the second round's model excludes site "b"
+    entirely; it re-enters with its full accumulated contribution on its
+    next report.  A sequence of parts is accepted in both modes (async
+    assigns site ids 0..len-1).
     """
 
     def __init__(self, engine):
         self.engine = engine
         self.model: daef.DAEFModel | None = None
         self.rounds_run = 0
+        self.clock = 0
+        self._ledger: dict = {}
 
-    def round(self, parts: Sequence[Array]) -> daef.DAEFModel:
-        """Aggregate one federation round and fold it into the session model.
+    # ------------------------------------------------------------------
+    # Rounds
+    # ------------------------------------------------------------------
 
-        ``parts``: one [features, samples] partition per participating node.
-        Returns the accumulated aggregate (== the round aggregate on the
-        first round)."""
-        cfg = self.engine.config
-        parts = [jnp.asarray(p) for p in parts]
-        if not parts:
-            raise PlanError("round: need at least one partition")
-        m0 = cfg.layer_sizes[0]
-        for i, p in enumerate(parts):
-            if p.ndim != 2 or p.shape[0] != m0:
-                raise PlanError(
-                    f"round: partition {i} must be [features={m0}, samples], "
-                    f"got shape {tuple(p.shape)}"
-                )
-        update = self._aggregate_round(parts)
+    def round(self, parts) -> daef.DAEFModel | None:
+        """Run one federation round and return the live global model.
+
+        Args:
+            parts: the round's per-site partitions, each ``[features m0,
+                samples]``.  A sequence (sites implicitly numbered 0..n-1)
+                or a mapping of site id -> partition (async sites keep
+                their ledger identity across rounds by id).
+
+        Returns:
+            The accumulated global ``DAEFModel``.  Sync: the running merge
+            of every round so far.  Async: the model rebuilt from all
+            fresh sites' accumulated contributions — ``None`` only when no
+            site has ever reported.
+
+        Raises:
+            PlanError: empty ``parts`` in sync mode (lockstep rounds need
+                at least one partition; async treats it as a refresh-only
+                tick), a partition with the wrong shape, or a round
+                incompatible with the plan's ``merge`` strategy (e.g.
+                ``merge="tree"`` with a non-power-of-two sync node count).
+        """
+        named = self._check_parts(parts)
+        if self.engine.plan.async_federation:
+            return self._round_async(named)
+        if not named:
+            raise PlanError(
+                "round: need at least one partition (sync rounds are "
+                "lockstep; use ExecutionPlan(federation='async') for "
+                "refresh-only rounds)"
+            )
+        update = self._aggregate_round([p for _, p in named])
         self.model = (
             update if self.model is None
-            else daef.merge_models(cfg, self.model, update)
+            else daef.merge_models(self.engine.config, self.model, update)
         )
         self.rounds_run += 1
         return self.model
+
+    def _check_parts(self, parts) -> list[tuple]:
+        """Normalize parts to [(site, [m0, n] array), ...], validated."""
+        if isinstance(parts, Mapping):
+            named = [(site, jnp.asarray(p)) for site, p in parts.items()]
+        elif isinstance(parts, Sequence) or hasattr(parts, "__iter__"):
+            named = [(i, jnp.asarray(p)) for i, p in enumerate(parts)]
+        else:
+            raise PlanError(
+                f"round: parts must be a sequence of partitions or a "
+                f"site -> partition mapping, got {type(parts).__name__}"
+            )
+        m0 = self.engine.config.layer_sizes[0]
+        for site, p in named:
+            if p.ndim != 2 or p.shape[0] != m0:
+                raise PlanError(
+                    f"round: partition {site!r} must be [features={m0}, "
+                    f"samples], got shape {tuple(p.shape)}"
+                )
+        return named
+
+    # ------------------------------------------------------------------
+    # Sync aggregation (lockstep)
+    # ------------------------------------------------------------------
 
     def _aggregate_round(self, parts: list[Array]) -> daef.DAEFModel:
         cfg, merge = self.engine.config, self.engine.plan.merge
@@ -98,7 +200,9 @@ class FederationSession:
         if p & (p - 1):
             raise PlanError(
                 f"round: merge='tree' needs a power-of-two node count, got "
-                f"{p} partitions — pad the round or use merge='pairwise'"
+                f"{p} partitions — pad the round, use merge='pairwise', or "
+                "go through federation='async' (its masked tree pads "
+                "non-power-of-two rounds automatically)"
             )
         lens = {part.shape[1] for part in parts}
         if len(lens) > 1:
@@ -116,12 +220,160 @@ class FederationSession:
         merged = fleet_sharded.fleet_merge_tree(cfg, fl, p, mesh=mesh)
         return fleet.get_model(merged, 0)
 
+    # ------------------------------------------------------------------
+    # Async: versioned ledger + continual refresh
+    # ------------------------------------------------------------------
+
+    def _round_async(self, named: list[tuple]) -> daef.DAEFModel | None:
+        self.clock += 1
+        if named:
+            for site, state in zip(
+                [s for s, _ in named],
+                self._local_states([p for _, p in named]),
+            ):
+                rec = self._ledger.get(site)
+                if rec is None:
+                    self._ledger[site] = _SiteRecord(state, self.clock)
+                else:
+                    rec.state = self._fold(rec.state, state)
+                    rec.version = self.clock
+                    rec.submits += 1
+        model = self._refresh()
+        if model is not None:
+            self.model = model
+        self.rounds_run += 1
+        return self.model
+
+    def _local_states(self, parts: list[Array]) -> list[ExchangeState]:
+        """Fit the round's local models and publish their exchange states.
+
+        Equal-width rounds batch into ONE vmapped fleet dispatch under
+        vmap/mesh plans; ragged rounds (and loop plans, the parity
+        baseline) fit per site.  All sites share the config's seed — the
+        paper's shared stage-1 randomness that makes knowledge mergeable.
+        """
+        cfg, plan = self.engine.config, self.engine.plan
+        widths = {p.shape[1] for p in parts}
+        if plan.mode != "loop" and len(parts) > 1 and len(widths) == 1:
+            fl = fleet._fit_fleet(cfg, jnp.stack(parts), seeds=None,
+                                  lam_hidden=None, lam_last=None)
+            models = [fleet.get_model(fl, i) for i in range(len(parts))]
+        else:
+            models = [daef.fit(cfg, p) for p in parts]
+        m0 = cfg.layer_sizes[0]
+        return [
+            (
+                dsvd.pad_rank(m.encoder_factors, m0),
+                m.layer_knowledge,
+                np.asarray(m.train_errors),
+            )
+            for m in models
+        ]
+
+    def _fold(self, acc: ExchangeState, new: ExchangeState) -> ExchangeState:
+        """Fold a site's new block into its accumulated contribution —
+        the delta-replay store: a rejoining site re-enters with everything
+        it ever reported, in one state."""
+        from repro.core import federated
+
+        empty = np.zeros(0, np.float32)
+        enc, knw, _ = federated.merge_exchange_states(
+            self.engine.config,
+            [(acc[0], acc[1], empty), (new[0], new[1], empty)],
+        )
+        return enc, knw, np.concatenate([acc[2], new[2]])
+
+    def _refresh(self) -> daef.DAEFModel | None:
+        """Rebuild the live model from every fresh site's accumulated state
+        (one weight re-solve).  No fresh sites -> keep the previous model."""
+        cfg, plan = self.engine.config, self.engine.plan
+        fresh = [
+            rec.state for rec in self._ledger.values()
+            if self.clock - rec.version <= plan.max_staleness
+        ]
+        if not fresh:
+            return None
+        enc, knw, errors = self._reduce_states(fresh)
+        return daef._model_from_knowledge(
+            cfg, enc, knw, cfg.layer_keys(), cfg.lam_hidden, cfg.lam_last,
+            jnp.asarray(errors),
+        )
+
+    def _reduce_states(self, states: list[ExchangeState]):
+        """Reduce fresh exchange states per ``plan.merge``: host sequential
+        / pairwise (`federated.merge_exchange_states`), or the masked
+        on-mesh butterfly (`fleet_sharded.merge_state_tree`)."""
+        cfg, merge = self.engine.config, self.engine.plan.merge
+        from repro.core import federated
+
+        if merge == "tree" and len(states) > 1:
+            if cfg.method != "gram":
+                raise PlanError(
+                    "round: federation='async' with merge='tree' needs "
+                    "method='gram' (the masked on-mesh reduction stacks "
+                    "fixed-shape states; svd factors are rank-ragged) — "
+                    "use merge='sequential'/'pairwise' for method='svd'"
+                )
+            n = len(states)
+            s_padded = 1 << (n - 1).bit_length()
+            padded = states + [states[0]] * (s_padded - n)
+            enc, knw = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves),
+                *[(st[0], st[1]) for st in padded],
+            )
+            mask = np.zeros(s_padded, np.float32)
+            mask[:n] = 1.0
+            mesh = self.engine.mesh if self.engine.plan.tenant_sharded else None
+            if mesh is not None and s_padded % mesh.shape[
+                fleet_sharded.TENANT_AXIS
+            ]:
+                mesh = None  # slot count does not tile the plan's fleet mesh
+            enc_m, knw_m = fleet_sharded.merge_state_tree(
+                cfg, enc, knw, mask, mesh=mesh
+            )
+            errors = np.concatenate([st[2] for st in states])
+            return enc_m, knw_m, errors
+        if merge == "pairwise" and len(states) > 1:
+            while len(states) > 1:
+                nxt = [
+                    federated.merge_exchange_states(cfg, states[i:i + 2])
+                    for i in range(0, len(states) - 1, 2)
+                ]
+                if len(states) % 2:
+                    nxt.append(states[-1])
+                states = nxt
+            return states[0]
+        return federated.merge_exchange_states(cfg, states)
+
+    # ------------------------------------------------------------------
+    # Site lifecycle / introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def sites(self) -> dict:
+        """Site id -> current staleness (async ledger view; {} for sync)."""
+        return {site: self.clock - rec.version
+                for site, rec in self._ledger.items()}
+
+    def staleness(self, site) -> int:
+        """Refresh rounds since ``site`` last reported (0 = reported in the
+        most recent round).  Raises ``KeyError`` for a site never seen."""
+        return self.clock - self._ledger[site].version
+
+    def is_fresh(self, site) -> bool:
+        """Whether ``site`` currently contributes to the live model."""
+        return self.staleness(site) <= self.engine.plan.max_staleness
+
     def reset(self) -> None:
-        """Forget the accumulated model (start a fresh federation)."""
+        """Forget the accumulated model, ledger and clock (fresh federation)."""
         self.model = None
         self.rounds_run = 0
+        self.clock = 0
+        self._ledger = {}
 
     def __repr__(self) -> str:
         return (f"FederationSession(rounds_run={self.rounds_run}, "
+                f"federation={self.engine.plan.federation!r}, "
                 f"merge={self.engine.plan.merge!r}, "
+                f"sites={len(self._ledger)}, "
                 f"trained={self.model is not None})")

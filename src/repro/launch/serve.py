@@ -1,6 +1,6 @@
-"""Serving launcher: LM decode, or a multi-tenant DAEF fleet scorer.
+"""Serving launcher: LM decode, a DAEF fleet scorer, or async federation.
 
-Two modes share this entry point:
+Three modes share this entry point:
 
 * LM serve (default) — prefill a batch of prompts, then decode tokens; the
   CPU demo of the serve path (prefill + KV-cache decode) used by the
@@ -9,11 +9,18 @@ Two modes share this entry point:
   one vmap dispatch, then serve rounds of ragged per-tenant request batches:
   each round is padded to [K, m0, n_pad] and scored + thresholded in a
   SINGLE jitted call (scores of padding columns are NaN-masked).
+* Async federation (``--async-rounds R``) — drive a continual
+  ``FederationSession`` over ``--sites`` edge sites where a ``--straggle``
+  fraction of sites misses each round: stragglers fall out of the live
+  global model once past ``--max-staleness`` and rejoin with their full
+  backlog on their next report (see docs/federation.md).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --fleet 32 --rounds 20
+  PYTHONPATH=src python -m repro.launch.serve --async-rounds 6 --sites 8 \
+      --straggle 0.25 --max-staleness 1
 """
 from __future__ import annotations
 
@@ -128,6 +135,87 @@ def run_fleet(args) -> None:
     print("fleet serve OK")
 
 
+def run_async(args) -> None:
+    """Drive a continual async federation over straggling edge sites.
+
+    Every round each site produces a fresh data block, but only a random
+    (1 - ``--straggle``) subset reports; the rest bank their blocks as a
+    backlog and submit it whole on their next report (delta replay).  The
+    session rebuilds the live global model from whichever sites are within
+    ``--max-staleness`` refreshes — no barrier ever blocks a round.
+    """
+    from repro.core import daef
+    from repro.engine import DAEFEngine, ExecutionPlan, PlanError
+
+    s_count = args.sites
+    datasets = [
+        synthetic.make_dataset("cardio", seed=t, scale=args.scale)
+        for t in range(s_count)
+    ]
+    splits = [ds.train_test_split(fold=0) for ds in datasets]
+    m0 = splits[0][0].shape[0]
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9,
+                          lam_last=0.9)
+    try:
+        plan = ExecutionPlan(federation="async", merge="pairwise",
+                             max_staleness=args.max_staleness)
+        engine = DAEFEngine(cfg, plan)
+    except PlanError as e:
+        raise SystemExit(f"error: {e}") from e
+    session = engine.session()
+    print(f"async federation: {s_count} sites, straggle fraction "
+          f"{args.straggle}, max_staleness {args.max_staleness}")
+
+    # Pre-slice each site's train pool into one block per round.
+    rounds = args.async_rounds
+    blocks = []
+    for x_train in (s[0] for s in splits):
+        bounds = np.linspace(0, x_train.shape[1], rounds + 1).astype(int)
+        blocks.append([
+            x_train[:, bounds[r]:bounds[r + 1]].astype(np.float32)
+            for r in range(rounds)
+        ])
+
+    rng = np.random.default_rng(0)
+    backlog: list[list] = [[] for _ in range(s_count)]
+    for r in range(rounds):
+        report = rng.random(s_count) >= args.straggle
+        if not report.any():
+            report[rng.integers(s_count)] = True  # someone always reports
+        parts = {}
+        for t in range(s_count):
+            backlog[t].append(blocks[t][r])
+            if report[t]:
+                # The site ships its whole backlog: missed blocks replay as
+                # one delta the moment it comes back.
+                parts[t] = np.concatenate(backlog[t], axis=1)
+                backlog[t] = []
+        t0 = time.perf_counter()
+        model = session.round(parts)
+        jax.block_until_ready(model.weights[-1])
+        dt = time.perf_counter() - t0
+        fresh = sum(
+            stale <= args.max_staleness for stale in session.sites.values()
+        )
+        print(f"round {r + 1}/{rounds}: {len(parts)}/{s_count} sites "
+              f"reported, {fresh} fresh in the live model "
+              f"({dt * 1e3:.0f} ms)")
+
+    # One global model scores every site's held-out split.
+    mses = [
+        float(jnp.mean(daef.reconstruction_error(
+            cfg, session.model, jnp.asarray(s[1].astype(np.float32))
+        )))
+        for s in splits
+    ]
+    print(f"held-out reconstruction MSE across {s_count} sites: "
+          f"mean {np.mean(mses):.4f} (min {min(mses):.4f}, "
+          f"max {max(mses):.4f})")
+    assert bool(jnp.isfinite(session.model.weights[-1]).all()), \
+        "non-finite model"
+    print("async federation OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None, choices=sorted(registry.ARCHS))
@@ -157,6 +245,19 @@ def main() -> None:
                          "ExecutionPlan — per-layer Gram stats accumulate "
                          "over sample chunks of this width via "
                          "engine.fit_stream, bounding training memory")
+    ap.add_argument("--async-rounds", type=int, default=0,
+                    help="drive this many continual async federation rounds "
+                         "(ExecutionPlan(federation='async')) instead of an "
+                         "LM or a fleet")
+    ap.add_argument("--sites", type=int, default=8,
+                    help="async mode: number of federated edge sites")
+    ap.add_argument("--straggle", type=float, default=0.25,
+                    help="async mode: fraction of sites that (randomly) miss "
+                         "each round; they bank a backlog and replay it as "
+                         "one delta on their next report")
+    ap.add_argument("--max-staleness", type=int, default=1,
+                    help="async mode: refresh rounds a site may lag before "
+                         "it is excluded from the live global model")
     args = ap.parse_args()
 
     if args.fleet < 0:
@@ -173,6 +274,19 @@ def main() -> None:
         ap.error(f"--chunk-samples must be >= 1, got {args.chunk_samples}")
     if args.fleet and args.rounds < 1:
         ap.error(f"--rounds must be >= 1, got {args.rounds}")
+    if args.async_rounds < 0:
+        ap.error(f"--async-rounds must be >= 1, got {args.async_rounds}")
+    if args.async_rounds and args.fleet:
+        ap.error("--async-rounds and --fleet are separate modes; pick one")
+    if args.async_rounds:
+        if args.sites < 1:
+            ap.error(f"--sites must be >= 1, got {args.sites}")
+        if not 0.0 <= args.straggle < 1.0:
+            ap.error(f"--straggle must be in [0, 1), got {args.straggle}")
+        if args.max_staleness < 0:
+            ap.error(f"--max-staleness must be >= 0, got {args.max_staleness}")
+        run_async(args)
+        return
     if args.fleet:
         run_fleet(args)
         return
