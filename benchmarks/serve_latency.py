@@ -1,18 +1,26 @@
 """Serving latency microbenchmark.
 
-Two sections:
+Three sections:
 
 * **DAEF fleet serving (default)** — the `repro.engine` facade end to end:
   train K per-tenant anomaly detectors under an ``ExecutionPlan`` (vmap, and
   mesh when more than one device is visible), then measure per-round scoring
   latency over padded ragged request batches — p50/p95 ms/round and
   scores/sec, the numbers `launch/serve.py --fleet` prints, measured
-  repeatably.  Each run APPENDS one record per plan to the in-tree
-  trajectory ``BENCH_serve.json`` (a JSON list, committed per PR so the
-  serving-latency history accumulates; CI uploads it as an artifact).
+  repeatably.  Percentiles are interpolated (`repro.serving.metrics`), the
+  same helper the CLI report uses.
+* **Packed vs padded (default)** — continuous batching
+  (`repro.serving.FleetServer`) against the pad-to-max baseline at K=32
+  under a MIXED RAGGED load (most tenants trickle 1-4 samples, a burst
+  cohort sends hundreds): both paths score the identical per-round
+  requests, and the continuous record carries its ``speedup_vs_pad``.
 * **LM decode (``--lm``)** — decode ms/token per architecture family (CPU,
   reduced configs), the host-measurable counterpart of the decode-shape
   rooflines.
+
+Each run APPENDS its records to the in-tree trajectory ``BENCH_serve.json``
+(a JSON list, committed per PR so the serving-latency history accumulates;
+CI uploads it as an artifact).
 
   PYTHONPATH=src python benchmarks/serve_latency.py [--tenants 32] [--lm]
 """
@@ -26,6 +34,8 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.metrics import latency_summary
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
@@ -70,7 +80,7 @@ def fleet_records(k: int = 32, m0: int = 16, n_train: int = 256,
             if r:
                 lat.append(time.perf_counter() - t0)
                 served += int(counts.sum())
-        lat_ms = sorted(x * 1e3 for x in lat)
+        summary = latency_summary(lat, served)
         records.append({
             "api": "repro.engine.DAEFEngine",
             "plan": name,
@@ -78,13 +88,127 @@ def fleet_records(k: int = 32, m0: int = 16, n_train: int = 256,
             "tenants": k,
             "pad": n_pad,
             "rounds": rounds,
-            "p50_ms_per_round": lat_ms[len(lat_ms) // 2],
-            "p95_ms_per_round": lat_ms[max(0, int(len(lat_ms) * 0.95) - 1)],
-            "scores_per_sec": served / max(sum(lat), 1e-9),
+            "p50_ms_per_round": summary["p50_ms_per_round"],
+            "p95_ms_per_round": summary["p95_ms_per_round"],
+            "scores_per_sec": summary["scores_per_sec"],
         })
         print(f"fleet[{name}]: p50 {records[-1]['p50_ms_per_round']:.2f} ms/round, "
               f"{records[-1]['scores_per_sec']:.0f} scores/sec "
               f"({n_dev} device(s))")
+    return records
+
+
+def _mixed_ragged_counts(k: int, n_pad: int, seed: int,
+                         burst_frac: float = 0.2) -> np.ndarray:
+    """A mixed ragged request round: most tenants trickle 1-4 samples, a
+    ``burst_frac`` cohort sends ``n_pad/2 .. n_pad`` — the traffic shape
+    where pad-to-max dispatches mostly padding."""
+    rr = np.random.default_rng(seed)
+    counts = rr.integers(1, 5, size=k)
+    burst = rr.random(k) < burst_frac
+    counts[burst] = rr.integers(n_pad // 2, n_pad + 1, size=int(burst.sum()))
+    return counts
+
+
+def packing_records(k: int = 32, m0: int = 64, n_pad: int = 1024,
+                    rounds: int = 20, tile_width: int = 256,
+                    burst_frac: float = 0.2) -> list[dict]:
+    """Continuous batching vs the pad-to-max baseline, identical loads.
+
+    Both paths score the SAME per-round requests.  The pad path is the old
+    serving loop (one ``[K, m0, n_pad]`` padded batch -> engine.scores +
+    engine.classify, two dispatches); the continuous path is
+    `repro.serving.FleetServer` with the score cache OFF, so the comparison
+    is pure packing + dispatch (cache behaviour is covered by unit tests,
+    not benchmarked away here).
+    """
+    from repro.core import daef
+    from repro.engine import DAEFEngine, ExecutionPlan
+    from repro.serving import FleetServer
+
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 16, 32, m0), lam_hidden=0.9,
+                          lam_last=0.9)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(k, m0, 256)).astype(np.float32)
+    engine = DAEFEngine(cfg, ExecutionPlan(mode="vmap", tenants=k))
+    fl = engine.fit(xs, seeds=jnp.arange(k))
+    mus = engine.thresholds(fl, rule="q90")
+
+    # Pre-draw every round's requests once: both paths score identical data.
+    warm = 2
+    loads = []
+    for r in range(rounds + warm):
+        counts = _mixed_ragged_counts(k, n_pad, seed=100 + r,
+                                      burst_frac=burst_frac)
+        loads.append([
+            rng.normal(size=(m0, c)).astype(np.float32) for c in counts
+        ])
+
+    # --- pad-to-max baseline ------------------------------------------
+    lat_pad, served = [], 0
+    for r, reqs in enumerate(loads):
+        counts = np.array([x.shape[1] for x in reqs])
+        batch = np.zeros((k, m0, n_pad), np.float32)
+        for t in range(k):
+            batch[t, :, : counts[t]] = reqs[t]
+        t0 = time.perf_counter()
+        scores = engine.scores(fl, batch, n_valid=jnp.asarray(counts))
+        flags = engine.classify(scores, mus)
+        jax.block_until_ready(flags)
+        if r >= warm:
+            lat_pad.append(time.perf_counter() - t0)
+            served += int(counts.sum())
+    pad = latency_summary(lat_pad, served)
+
+    # --- continuous batching ------------------------------------------
+    server = FleetServer(engine, fl, tile_width=tile_width, rule="q90",
+                         use_cache=False)
+    server.warmup()  # pre-trace every tile shape: no serving-path compiles
+    lat_cb, served_cb = [], 0
+    for r, reqs in enumerate(loads):
+        t0 = time.perf_counter()
+        rids = [server.submit(t, reqs[t]) for t in range(k)]
+        server.flush()
+        results = [server.take(rid) for rid in rids]
+        if r >= warm:
+            lat_cb.append(time.perf_counter() - t0)
+            served_cb += sum(res.scores.size for res in results)
+    cb = latency_summary(lat_cb, served_cb)
+
+    st = server.stats
+    density = st["scored"] / max(st["dispatched_cols"], 1)
+    speedup = cb["scores_per_sec"] / max(pad["scores_per_sec"], 1e-9)
+    shared = {
+        "api": "repro.serving",
+        "tenants": k,
+        "features": m0,
+        "pad": n_pad,
+        "rounds": rounds,
+        "burst_frac": burst_frac,
+        "load": "mixed-ragged",
+    }
+    records = [
+        {**shared, "packing": "pad",
+         "p50_ms_per_round": pad["p50_ms_per_round"],
+         "p95_ms_per_round": pad["p95_ms_per_round"],
+         "scores_per_sec": pad["scores_per_sec"]},
+        {**shared, "packing": "continuous",
+         "tile_width": tile_width,
+         "p50_ms_per_round": cb["p50_ms_per_round"],
+         "p95_ms_per_round": cb["p95_ms_per_round"],
+         "scores_per_sec": cb["scores_per_sec"],
+         "dispatches": st["dispatches"],
+         "dispatched_cols": st["dispatched_cols"],
+         "tile_density": round(density, 4),
+         "speedup_vs_pad": round(speedup, 3)},
+    ]
+    print(f"packing[pad]:        p50 {pad['p50_ms_per_round']:.2f} / "
+          f"p95 {pad['p95_ms_per_round']:.2f} ms/round, "
+          f"{pad['scores_per_sec']:.0f} scores/sec")
+    print(f"packing[continuous]: p50 {cb['p50_ms_per_round']:.2f} / "
+          f"p95 {cb['p95_ms_per_round']:.2f} ms/round, "
+          f"{cb['scores_per_sec']:.0f} scores/sec "
+          f"({density:.0%} tile density, {speedup:.2f}x vs pad)")
     return records
 
 
@@ -140,11 +264,15 @@ if __name__ == "__main__":
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--lm", action="store_true",
                     help="also run the per-arch LM decode table")
+    ap.add_argument("--no-packing", action="store_true",
+                    help="skip the packed-vs-padded comparison section")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"),
                     help="append fleet-serving records to this JSON-list "
                          "trajectory (default: repo root, committed per PR)")
     args = ap.parse_args()
     recs = fleet_records(k=args.tenants, n_pad=args.pad, rounds=args.rounds)
+    if not args.no_packing:
+        recs += packing_records(k=args.tenants, rounds=args.rounds)
     if args.out:
         append_trajectory(recs, args.out)
     if args.lm:

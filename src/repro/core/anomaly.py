@@ -18,15 +18,44 @@ import jax.numpy as jnp
 Array = jnp.ndarray
 
 
+def parse_quantile_rule(rule: str) -> float | None:
+    """Parse a ``"q<percent>"`` rule into its percent, or None if ``rule``
+    is not quantile-shaped (fractional and zero-padded percents included:
+    "q90", "q97.5", "q05").
+
+    Raises:
+        ValueError: quantile-shaped but with a percent outside (0, 100) —
+            "q0"/"q100" are degenerate (min/max, not a quantile threshold).
+    """
+    if not rule.startswith("q"):
+        return None
+    try:
+        pct = float(rule[1:])
+    except ValueError:
+        return None
+    if not 0.0 < pct < 100.0:
+        raise ValueError(
+            f"threshold rule {rule!r}: quantile percent must be in "
+            f"(0, 100), got {pct:g}"
+        )
+    return pct
+
+
 def threshold(train_errors: Array, rule: str = "extreme_iqr") -> Array:
     """Compute mu from training reconstruction errors.
 
-    rule: "unusual_iqr" | "extreme_iqr" | "q<percent>" (e.g. "q90").
+    rule: "unusual_iqr" | "extreme_iqr" | "q<percent>" (e.g. "q90",
+    "q97.5", "q05" — any float percent in (0, 100)).
+
+    Quantiles are NaN-aware (``nanquantile``): errors read back from a
+    NaN-masked padded score buffer (`fleet.fleet_scores` with ``n_valid``)
+    threshold over the valid samples only instead of collapsing to NaN.
     """
-    if rule.startswith("q") and rule[1:].isdigit():
-        return jnp.quantile(train_errors, float(rule[1:]) / 100.0)
-    q1 = jnp.quantile(train_errors, 0.25)
-    q3 = jnp.quantile(train_errors, 0.75)
+    pct = parse_quantile_rule(rule)
+    if pct is not None:
+        return jnp.nanquantile(train_errors, pct / 100.0)
+    q1 = jnp.nanquantile(train_errors, 0.25)
+    q3 = jnp.nanquantile(train_errors, 0.75)
     iqr = q3 - q1
     if rule == "unusual_iqr":
         return q3 + 1.5 * iqr

@@ -32,6 +32,7 @@ tolerances).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,22 @@ from repro.engine.plan import ExecutionPlan, PlanError
 Array = jnp.ndarray
 
 EngineState = daef.DAEFModel | fleet.DAEFFleet
+
+
+def _bumps_model_version(method):
+    """Mark an engine method as producing a NEW model: the engine's
+    ``model_version`` counter ticks after it returns (not on error).
+
+    The serving layer's score/threshold cache keys on this counter
+    (`serving.cache.ScoreCache`), so every state-producing mutation —
+    fit / fit_stream / partial_fit / merge / reduce and session rounds —
+    invalidates cached scores by construction."""
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        out = method(self, *args, **kwargs)
+        self._model_version += 1
+        return out
+    return wrapper
 
 
 class DAEFEngine:
@@ -109,12 +126,26 @@ class DAEFEngine:
             )
         self.config = config
         self.plan = plan
+        self._model_version = 0
         self._mesh = None
         if mesh is not None:
             self._check_mesh(mesh)
             self._mesh = mesh
         elif plan.mode == "mesh" and plan.mesh_devices is not None:
             self.mesh  # build eagerly: surface bad mesh sizes at init
+
+    @property
+    def model_version(self) -> int:
+        """Monotone counter of model-producing mutations through this
+        engine (fit / fit_stream / partial_fit / merge / reduce / session
+        rounds).  The serving layer keys its score/threshold cache on it:
+        a version bump means previously scored samples must re-score."""
+        return self._model_version
+
+    def _bump_version(self) -> None:
+        """Tick ``model_version`` for mutations that bypass the decorated
+        engine methods (e.g. `FederationSession.round`)."""
+        self._model_version += 1
 
     # ------------------------------------------------------------------
     # Mesh
@@ -251,6 +282,7 @@ class DAEFEngine:
     # fit / partial_fit
     # ------------------------------------------------------------------
 
+    @_bumps_model_version
     def fit(
         self,
         x,
@@ -344,6 +376,7 @@ class DAEFEngine:
             lam_last=lam_last, n_partitions=n_partitions, chunk_samples=chunk,
         )
 
+    @_bumps_model_version
     def fit_stream(
         self,
         batches,
@@ -437,6 +470,7 @@ class DAEFEngine:
             fleet._per_tenant(lam_last, self.config.lam_last, k, jnp.float32),
         )
 
+    @_bumps_model_version
     def partial_fit(self, state: EngineState, x_new) -> EngineState:
         """Incremental learning: absorb a new data block (per tenant).
 
@@ -592,6 +626,7 @@ class DAEFEngine:
     # Federation: merge / reduce / session
     # ------------------------------------------------------------------
 
+    @_bumps_model_version
     def merge(self, a: EngineState, b: EngineState) -> EngineState:
         """Federated aggregation of two states trained with shared seeds
         (tenant k of ``a`` merges with tenant k of ``b``).
@@ -632,6 +667,7 @@ class DAEFEngine:
             )
         return fleet.fleet_merge(self.config, a, b)
 
+    @_bumps_model_version
     def reduce(self, state: fleet.DAEFFleet, group_size: int) -> fleet.DAEFFleet:
         """Federate adjacent groups of ``group_size`` tenants into one model
         each (K -> K/group_size), using the plan's ``merge`` strategy:

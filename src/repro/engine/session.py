@@ -137,7 +137,11 @@ class FederationSession:
         """
         named = self._check_parts(parts)
         if self.engine.plan.async_federation:
-            return self._round_async(named)
+            model = self._round_async(named)
+            # A round produces a (possibly) new live model: tick the
+            # engine's model_version so serving caches invalidate.
+            self.engine._bump_version()
+            return model
         if not named:
             raise PlanError(
                 "round: need at least one partition (sync rounds are "
@@ -150,6 +154,7 @@ class FederationSession:
             else daef.merge_models(self.engine.config, self.model, update)
         )
         self.rounds_run += 1
+        self.engine._bump_version()
         return self.model
 
     def _check_parts(self, parts) -> list[tuple]:

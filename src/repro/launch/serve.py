@@ -6,9 +6,14 @@ Three modes share this entry point:
   CPU demo of the serve path (prefill + KV-cache decode) used by the
   decode-shape dry-runs.  Greedy sampling over synthetic prompts.
 * Fleet serve (``--fleet K``) — train K per-tenant DAEF anomaly detectors in
-  one vmap dispatch, then serve rounds of ragged per-tenant request batches:
-  each round is padded to [K, m0, n_pad] and scored + thresholded in a
-  SINGLE jitted call (scores of padding columns are NaN-masked).
+  one vmap dispatch, then serve rounds of ragged per-tenant request batches.
+  ``--packing continuous`` (default) routes them through the production
+  serving layer (`repro.serving.FleetServer`): requests pack into dense
+  tenant x sample tiles, scores+flags come back in one fused dispatch per
+  tile, repeated samples against an unchanged tenant hit the score cache.
+  ``--packing pad`` keeps the pad-to-max baseline: every round padded to
+  [K, m0, n_pad] and scored + thresholded for the whole fleet (scores of
+  padding columns are NaN-masked).
 * Async federation (``--async-rounds R``) — drive a continual
   ``FederationSession`` over ``--sites`` edge sites where a ``--straggle``
   fraction of sites misses each round: stragglers fall out of the live
@@ -45,6 +50,7 @@ def run_fleet(args) -> None:
     """
     from repro.core import daef, fleet_sharded
     from repro.engine import DAEFEngine, ExecutionPlan, PlanError
+    from repro.serving import metrics as serving_metrics
 
     k, n_pad = args.fleet, args.pad
     datasets = [
@@ -96,41 +102,72 @@ def run_fleet(args) -> None:
     print(f"fleet: trained {k} tenant models [{m0} features, {n_train} samples] "
           f"{how} ({t_fit:.2f}s incl. JIT)")
 
-    # Serving loop: ragged tenant request batches, padded to n_pad, one
-    # dispatch per round.
+    # Serving loop: ragged tenant request batches — either through the
+    # continuous-batching FleetServer (production path) or the pad-to-max
+    # baseline (one [K, m0, n_pad] dispatch per round).
+    server = None
+    if args.packing == "continuous":
+        from repro.serving import FleetServer
+
+        server = FleetServer(engine, fl, tile_width=args.tile_width,
+                             rule="q90")
+        n_shapes = server.warmup()
+        print(f"fleet: pre-traced {n_shapes} tile shapes "
+              "(no serving-path compiles)")
     rng = np.random.default_rng(0)
     round_served = []
     flagged = 0
     lat = []
     for _ in range(args.rounds):
         counts = rng.integers(1, n_pad + 1, size=k)
-        batch = np.zeros((k, m0, n_pad), np.float32)
+        requests = []
         for t in range(k):
             x_test = splits[t][1]
             # A tenant's request burst can't exceed its test pool when
             # sampling without replacement.
             counts[t] = min(int(counts[t]), x_test.shape[1])
             idx = rng.choice(x_test.shape[1], size=counts[t], replace=False)
-            batch[t, :, : counts[t]] = x_test[:, idx]
-        t0 = time.perf_counter()
-        scores = engine.scores(fl, batch, n_valid=jnp.asarray(counts))
-        flags = engine.classify(scores, mus)
-        jax.block_until_ready(flags)
-        lat.append(time.perf_counter() - t0)
+            requests.append(x_test[:, idx].astype(np.float32))
+        if server is not None:
+            t0 = time.perf_counter()
+            rids = [server.submit(t, requests[t]) for t in range(k)]
+            server.flush()
+            results = [server.take(rid) for rid in rids]
+            lat.append(time.perf_counter() - t0)
+            flagged += int(sum(r.flags.sum() for r in results))
+        else:
+            batch = np.zeros((k, m0, n_pad), np.float32)
+            for t in range(k):
+                batch[t, :, : counts[t]] = requests[t]
+            t0 = time.perf_counter()
+            scores = engine.scores(fl, batch, n_valid=jnp.asarray(counts))
+            flags = engine.classify(scores, mus)
+            jax.block_until_ready(flags)
+            lat.append(time.perf_counter() - t0)
+            flagged += int(flags.sum())
         round_served.append(int(counts.sum()))
-        flagged += int(flags.sum())
-    # Steady-state stats exclude round 0 (JIT warm-up) from BOTH the time
-    # and the request count, unless it is the only round.
+    # Steady-state stats exclude round 0 (JIT warm-up) from the time, the
+    # percentiles AND the served-request count — one denominator for all
+    # three (unless a single round ran).
     steady = slice(1, None) if len(lat) > 1 else slice(None)
-    lat_ms = sorted(x * 1e3 for x in lat[steady])
-    p50 = lat_ms[len(lat_ms) // 2]
-    total = sum(lat[steady])
-    served = sum(round_served)
-    print(f"served {served} requests over {args.rounds} rounds "
-          f"({k} tenants x <= {n_pad} padded samples per dispatch)")
-    print(f"latency p50 {p50:.2f} ms/round; "
-          f"throughput {sum(round_served[steady]) / max(total, 1e-9):.0f} "
-          f"scores/sec (steady-state); flagged {flagged} anomalies")
+    summary = serving_metrics.latency_summary(
+        lat[steady], sum(round_served[steady])
+    )
+    how = (f"continuous batching, <= {args.tile_width}-wide dense tiles"
+           if server is not None
+           else f"{k} tenants x <= {n_pad} padded samples per dispatch")
+    print(f"served {summary['served']} requests over {summary['rounds']} "
+          f"steady-state rounds (+1 warm-up; {how})")
+    print(f"latency p50 {summary['p50_ms_per_round']:.2f} / "
+          f"p95 {summary['p95_ms_per_round']:.2f} ms/round; "
+          f"throughput {summary['scores_per_sec']:.0f} scores/sec "
+          f"(steady-state); flagged {flagged} anomalies")
+    if server is not None:
+        s = server.stats
+        print(f"serving: {s['dispatches']} tile dispatches, "
+              f"{s['dispatched_cols']} dispatched columns for "
+              f"{s['scored']} scored samples, "
+              f"{s['cache_hit_cols']} cache-hit columns")
     assert bool(jnp.isfinite(fl.model.train_errors).all()), "non-finite fit"
     print("fleet serve OK")
 
@@ -228,6 +265,16 @@ def main() -> None:
     ap.add_argument("--mesh-tenants", type=int, default=0,
                     help="fleet mode: shard the tenant axis over this many "
                          "devices (NamedSharding on a 'tenants' mesh axis)")
+    ap.add_argument("--packing", default="continuous",
+                    choices=["continuous", "pad"],
+                    help="fleet mode: request batching — 'continuous' "
+                         "(production serving layer: dense tenant x sample "
+                         "tiles, score cache, online thresholds) or 'pad' "
+                         "(baseline: every round padded to [K, m0, --pad] "
+                         "and dispatched fleet-wide)")
+    ap.add_argument("--tile-width", type=int, default=32,
+                    help="fleet mode, continuous packing: max samples per "
+                         "tile slot")
     ap.add_argument("--pad", type=int, default=64,
                     help="fleet mode: per-tenant sample padding per dispatch")
     ap.add_argument("--rounds", type=int, default=10,
@@ -260,10 +307,16 @@ def main() -> None:
                          "it is excluded from the live global model")
     args = ap.parse_args()
 
+    # NOTE: several flags use 0 as their "mode/feature off" sentinel — the
+    # messages state the accepted domain EXACTLY (a message promising
+    # ">= 1" while the check admits 0 lies to the user; tests/
+    # test_serve_cli.py pins message <-> check agreement).
     if args.fleet < 0:
-        ap.error(f"--fleet must be a positive tenant count, got {args.fleet}")
+        ap.error(f"--fleet must be a tenant count >= 1, or 0 to serve an "
+                 f"LM instead; got {args.fleet}")
     if args.mesh_tenants < 0:
-        ap.error(f"--mesh-tenants must be >= 1, got {args.mesh_tenants}")
+        ap.error(f"--mesh-tenants must be >= 1, or 0 to disable tenant "
+                 f"sharding; got {args.mesh_tenants}")
     if args.mesh_tenants and not args.fleet:
         ap.error("--mesh-tenants only applies to --fleet mode")
     if args.stats_backend and not args.fleet:
@@ -271,11 +324,15 @@ def main() -> None:
     if args.chunk_samples and not args.fleet:
         ap.error("--chunk-samples only applies to --fleet mode")
     if args.chunk_samples < 0:
-        ap.error(f"--chunk-samples must be >= 1, got {args.chunk_samples}")
+        ap.error(f"--chunk-samples must be >= 1, or 0 for one-shot "
+                 f"(non-streaming) training; got {args.chunk_samples}")
     if args.fleet and args.rounds < 1:
         ap.error(f"--rounds must be >= 1, got {args.rounds}")
+    if args.fleet and args.tile_width < 1:
+        ap.error(f"--tile-width must be >= 1, got {args.tile_width}")
     if args.async_rounds < 0:
-        ap.error(f"--async-rounds must be >= 1, got {args.async_rounds}")
+        ap.error(f"--async-rounds must be >= 1, or 0 for LM/fleet mode; "
+                 f"got {args.async_rounds}")
     if args.async_rounds and args.fleet:
         ap.error("--async-rounds and --fleet are separate modes; pick one")
     if args.async_rounds:

@@ -1,0 +1,28 @@
+"""Production fleet serving on top of `repro.engine` (docs/serving.md).
+
+Continuous batching (`TilePacker` over a `RequestQueue`), a model-versioned
+score/threshold cache (`ScoreCache`), additive quantile sketches for online
+threshold recalibration (`ErrorSketch`), and the serving loop that ties
+them together (`FleetServer`).
+"""
+from repro.serving.cache import ScoreCache, sample_hashes
+from repro.serving.metrics import latency_summary, percentile
+from repro.serving.packer import SlotAssignment, Tile, TilePacker
+from repro.serving.queue import RequestQueue, ScoreRequest
+from repro.serving.recalibration import ErrorSketch
+from repro.serving.server import FleetServer, ScoreResult
+
+__all__ = [
+    "ErrorSketch",
+    "FleetServer",
+    "RequestQueue",
+    "ScoreCache",
+    "ScoreRequest",
+    "ScoreResult",
+    "SlotAssignment",
+    "Tile",
+    "TilePacker",
+    "latency_summary",
+    "percentile",
+    "sample_hashes",
+]

@@ -1,0 +1,359 @@
+"""FleetServer — the production serving loop over a trained DAEF fleet.
+
+Ties the serving pieces together on top of `DAEFEngine`:
+
+* **continuous batching** — `submit` strips cache hits and queues the rest;
+  `step` packs a dense ``[S, m0, T]`` tile from whichever tenants have
+  pending work (`packer.TilePacker`) and dispatches ONE fused jitted call
+  that gathers each slot's tenant model, scores, NaN-masks the slot padding
+  and thresholds — scores + flags in a single dispatch (the pad-to-max
+  baseline pays two);
+* **double buffering** — the dispatch is asynchronous and the tile input
+  buffer is donated; the server keeps one tile in flight and reads tile
+  ``t`` back to the host only after tile ``t+1`` has been dispatched, so
+  host readout overlaps device compute;
+* **score/threshold cache** — keyed on ``(tenant, model_version,
+  sample_hash)`` (`cache.ScoreCache`); requests whose samples were already
+  scored against an unchanged tenant complete without any dispatch;
+* **online threshold recalibration** — per-tenant additive error sketches
+  (`recalibration.ErrorSketch`) fold in ONLY the new block's train errors on
+  `partial_fit`/`update_state`, so a fleet retrains and re-serves without a
+  stop-the-world quantile pass over every error it ever produced.
+
+See docs/serving.md for the walkthrough.
+"""
+from __future__ import annotations
+
+import warnings
+from collections import deque
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daef, fleet
+from repro.engine.plan import PlanError
+from repro.serving import cache as cache_mod
+from repro.serving.packer import Tile, TilePacker
+from repro.serving.queue import RequestQueue, ScoreRequest
+from repro.serving.recalibration import ErrorSketch
+
+Array = jnp.ndarray
+
+
+@partial(jax.jit, static_argnames=("config",), donate_argnums=(2,))
+def _score_tile(config, model, tile, slot_tenants, n_valid, mus):
+    """Score one packed tile: gather each slot's tenant model, reconstruct,
+    NaN-mask slot padding, threshold.  One dispatch for scores AND flags;
+    the tile buffer is donated (the next tile reuses it)."""
+    slot_model = jax.tree.map(lambda leaf: leaf[slot_tenants], model)
+    errs = jax.vmap(partial(daef.reconstruction_error, config))(slot_model, tile)
+    mask = jnp.arange(tile.shape[-1])[None, :] < n_valid[:, None]
+    errs = jnp.where(mask, errs, jnp.nan)
+    flags = (errs > mus[slot_tenants][:, None]).astype(jnp.int32)
+    return errs, flags
+
+
+class ScoreResult(NamedTuple):
+    """A completed request: per-sample scores and anomaly flags."""
+
+    request_id: int
+    tenant: int
+    scores: np.ndarray   # [n] float32
+    flags: np.ndarray    # [n] int32 (NaN-score padding classifies 0)
+    cached_cols: int     # how many columns the score cache answered
+
+
+class FleetServer:
+    """Continuous-batching scorer for a trained per-tenant fleet.
+
+    >>> server = FleetServer(engine, fl)
+    >>> rid = server.submit(tenant=3, x=samples)     # [m0, n] float32
+    >>> server.flush()                               # drain the queue
+    >>> result = server.take(rid)
+    >>> result.scores.shape, result.flags.shape
+    ((n,), (n,))
+
+    ``stats`` tracks dispatches / scored samples / cache hit counts — the
+    numbers `launch/serve.py --fleet --packing continuous` reports.
+    """
+
+    def __init__(
+        self,
+        engine,
+        state: fleet.DAEFFleet,
+        *,
+        slots: int | None = None,
+        tile_width: int = 32,
+        rule: str = "q95",
+        use_cache: bool = True,
+        cache_entries: int = 1 << 17,
+        sketch_bins: int = 1024,
+    ):
+        if not isinstance(state, fleet.DAEFFleet):
+            raise PlanError(
+                "FleetServer serves a DAEFFleet; wrap a single model via "
+                "fleet.fleet_from_models (1-tenant fleets serve fine)"
+            )
+        if state.size != engine.plan.tenants:
+            raise PlanError(
+                f"fleet has {state.size} tenants but the engine plan "
+                f"declares tenants={engine.plan.tenants}"
+            )
+        self.engine = engine
+        self.state = state
+        self.rule = rule
+        self.version = engine.model_version
+        k = state.size
+        m0 = engine.config.layer_sizes[0]
+        self.packer = TilePacker(m0, slots=min(slots or k, k),
+                                 width=tile_width)
+        self.queue = RequestQueue()
+        self.cache = cache_mod.ScoreCache(cache_entries) if use_cache else None
+        self._sketch_bins = sketch_bins
+        self.sketches = [ErrorSketch(bins=sketch_bins) for _ in range(k)]
+        train_errors = np.asarray(state.model.train_errors)
+        for t in range(k):
+            self.sketches[t].add(train_errors[t])
+        self._train_cols = train_errors.shape[-1]
+        self._mus: np.ndarray | None = None
+        self._mus_dev = None
+        self._inflight: deque = deque()
+        self._next_id = 0
+        self.results: dict[int, ScoreResult] = {}
+        self.stats = {
+            "submitted": 0, "served": 0, "scored": 0, "dispatches": 0,
+            "dispatched_cols": 0, "cache_hit_cols": 0, "recalibrations": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # Thresholds (sketch-derived, cached per model version)
+    # ------------------------------------------------------------------
+
+    @property
+    def thresholds(self) -> np.ndarray:
+        """Per-tenant mu [K] from the recalibration sketches (lazy, cached
+        per (tenant, model_version))."""
+        if self._mus is None:
+            mus = np.empty(len(self.sketches), np.float32)
+            for t, sk in enumerate(self.sketches):
+                mu = self.cache.get_threshold(t, self.version) if self.cache \
+                    else None
+                if mu is None:
+                    mu = sk.threshold(self.rule)
+                    if self.cache:
+                        self.cache.put_threshold(t, self.version, mu)
+                mus[t] = mu
+            self._mus = mus
+            self._mus_dev = jnp.asarray(mus)
+        return self._mus
+
+    def warmup(self) -> int:
+        """Pre-trace every tile shape the packer can emit.
+
+        The packer bounds its shape set to pow2-rounded ``(slots, width)``
+        combinations; tracing them all up front moves every compile out of
+        the serving path (otherwise the first burst of an unseen shape eats
+        a retrace in its latency).  Returns the number of shapes compiled.
+        """
+        self.thresholds
+        shapes = self.packer.shapes()
+        m0 = self.engine.config.layer_sizes[0]
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            for s, t in shapes:
+                errs, flags = _score_tile(
+                    self.engine.config, self.state.model,
+                    jnp.zeros((s, m0, t), jnp.float32),
+                    jnp.zeros(s, jnp.int32), jnp.zeros(s, jnp.int32),
+                    self._mus_dev,
+                )
+            jax.block_until_ready(errs)
+        return len(shapes)
+
+    # ------------------------------------------------------------------
+    # Request intake
+    # ------------------------------------------------------------------
+
+    def submit(self, tenant: int, x, request_id: int | None = None) -> int:
+        """Queue a scoring request for ``tenant``; returns its request id.
+
+        Samples already scored against this (tenant, model_version) complete
+        from the cache without entering the dispatch queue; a request whose
+        columns ALL hit finishes immediately.
+        """
+        x = np.ascontiguousarray(np.asarray(x, np.float32))
+        m0 = self.engine.config.layer_sizes[0]
+        if x.ndim != 2 or x.shape[0] != m0:
+            raise PlanError(
+                f"submit: samples must be [features={m0}, n], got "
+                f"{x.shape}"
+            )
+        if not 0 <= tenant < self.state.size:
+            raise PlanError(
+                f"submit: tenant {tenant} outside fleet of {self.state.size}"
+            )
+        if request_id is None:
+            request_id = self._next_id
+        self._next_id = max(self._next_id, request_id) + 1
+        n = x.shape[1]
+        req = ScoreRequest(
+            request_id=request_id, tenant=tenant, x=x,
+            scores=np.full(n, np.nan, np.float32),
+            flags=np.zeros(n, np.int32), pending=n,
+        )
+        self.stats["submitted"] += n
+        miss_cols = np.arange(n)
+        if self.cache is not None:
+            req.hashes = cache_mod.sample_hashes(x)
+            hit_j, hit_s, misses = self.cache.get_many(
+                tenant, self.version, req.hashes
+            )
+            if hit_j:
+                req.scores[hit_j] = hit_s
+                req.pending -= len(hit_j)
+                req.cached_cols += len(hit_j)
+            miss_cols = np.asarray(misses, np.int64)
+            self.stats["cache_hit_cols"] += len(hit_j)
+        if req.pending == 0:
+            self._finish(req)
+        else:
+            self.queue.push(req, miss_cols)
+        return request_id
+
+    # ------------------------------------------------------------------
+    # Serving loop
+    # ------------------------------------------------------------------
+
+    def step(self) -> bool:
+        """Pack + dispatch one tile; harvest the previous one (double
+        buffer).  Returns False when the queue had no work."""
+        tile = self.packer.pack(self.queue)
+        if tile is None:
+            return False
+        self.thresholds  # materialize mus for this version
+        with warnings.catch_warnings():
+            # Backends without buffer donation (CPU) warn at trace time
+            # that the donated tile buffer was not usable; where donation
+            # IS supported the next tile reuses it.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            errs, flags = _score_tile(
+                self.engine.config, self.state.model, jnp.asarray(tile.x),
+                jnp.asarray(tile.slot_tenants), jnp.asarray(tile.n_valid),
+                self._mus_dev,
+            )
+        self.stats["dispatches"] += 1
+        self.stats["dispatched_cols"] += int(np.prod(tile.x.shape[::2]))
+        self._inflight.append((tile, errs, flags))
+        # Depth-2 pipeline: read tile t back only after t+1 is in flight.
+        while len(self._inflight) > 1:
+            self._harvest()
+        return True
+
+    def flush(self) -> int:
+        """Drain the queue and all in-flight tiles; returns completed
+        request count available in ``results``."""
+        while self.step():
+            pass
+        while self._inflight:
+            self._harvest()
+        return len(self.results)
+
+    def _harvest(self) -> None:
+        tile, errs, flags = self._inflight.popleft()
+        errs = np.asarray(errs)     # blocks on the dispatch
+        flags = np.asarray(flags)
+        for a in tile.assignments:
+            stop = a.start + a.cols.size
+            dst = a.sl if a.sl is not None else a.cols
+            a.request.scores[dst] = errs[a.slot, a.start:stop]
+            a.request.flags[dst] = flags[a.slot, a.start:stop]
+            a.request.pending -= int(a.cols.size)
+            self.stats["scored"] += int(a.cols.size)
+            if self.cache is not None and a.request.hashes is not None:
+                hs = a.request.hashes
+                run = errs[a.slot, a.start:stop]
+                self.cache.put_many(
+                    a.request.tenant, self.version,
+                    [hs[j] for j in a.cols.tolist()], run.tolist(),
+                )
+            if a.request.done:
+                self._finish(a.request)
+
+    def _finish(self, req: ScoreRequest) -> None:
+        # Cache-hit columns never went through the kernel's thresholding —
+        # flag them here with the same version's mus (NaN compares False).
+        mus = self.thresholds
+        with np.errstate(invalid="ignore"):
+            req.flags = (req.scores > mus[req.tenant]).astype(np.int32)
+        self.stats["served"] += req.n_samples
+        self.results[req.request_id] = ScoreResult(
+            request_id=req.request_id, tenant=req.tenant, scores=req.scores,
+            flags=req.flags, cached_cols=req.cached_cols,
+        )
+
+    def take(self, request_id: int) -> ScoreResult:
+        """Pop a completed request's result (KeyError if not done yet)."""
+        return self.results.pop(request_id)
+
+    # ------------------------------------------------------------------
+    # Model lifecycle: retrain without a stop-the-world
+    # ------------------------------------------------------------------
+
+    def partial_fit(self, x_new) -> fleet.DAEFFleet:
+        """Absorb a new data block into the served fleet.
+
+        Flushes in-flight work (scored under the old version), retrains via
+        the engine (which bumps the model version, invalidating every cache
+        key), and folds ONLY the new block's train errors into the
+        recalibration sketches — the online-threshold path.
+        """
+        self.flush()
+        new_state = self.engine.partial_fit(self.state, x_new)
+        self.update_state(new_state)
+        return new_state
+
+    def update_state(self, new_state: fleet.DAEFFleet) -> None:
+        """Swap in a retrained fleet (e.g. from a `FederationSession`
+        round), folding the appended train errors into the sketches."""
+        if not isinstance(new_state, fleet.DAEFFleet) or \
+                new_state.size != self.state.size:
+            raise PlanError(
+                f"update_state: expected a {self.state.size}-tenant "
+                "DAEFFleet"
+            )
+        self.flush()
+        errors = np.asarray(new_state.model.train_errors)
+        if errors.shape[-1] > self._train_cols:
+            new_block = errors[..., self._train_cols:]
+            for t in range(new_state.size):
+                self.sketches[t].add(new_block[t])
+            self.stats["recalibrations"] += 1
+        elif errors.shape[-1] < self._train_cols:
+            # Not an append (e.g. a freshly fit fleet): rebuild the sketches.
+            self.sketches = [
+                ErrorSketch.from_errors(errors[t], bins=self._sketch_bins)
+                for t in range(new_state.size)
+            ]
+            self.stats["recalibrations"] += 1
+        self._train_cols = errors.shape[-1]
+        self.state = new_state
+        # Engine mutations bump the counter; a state built outside the
+        # engine still must invalidate, so the server version is monotone.
+        self.version = max(self.engine.model_version, self.version + 1)
+        self._mus = None
+        self._mus_dev = None
+        if self.cache is not None:
+            self.cache.drop_stale(self.version)
+
+    def __repr__(self) -> str:
+        return (f"FleetServer(tenants={self.state.size}, "
+                f"version={self.version}, pending={len(self.queue)}, "
+                f"dispatches={self.stats['dispatches']}, "
+                f"cache={self.cache!r})")

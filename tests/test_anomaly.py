@@ -27,6 +27,37 @@ def test_unknown_rule():
         anomaly.threshold(jnp.ones(10), "qx")
 
 
+def test_fractional_and_padded_quantile_rules():
+    errs = jnp.linspace(0, 1, 1001)
+    np.testing.assert_allclose(
+        anomaly.threshold(errs, "q97.5"), 0.975, atol=1e-3
+    )
+    np.testing.assert_allclose(anomaly.threshold(errs, "q05"), 0.05,
+                               atol=1e-3)
+    assert anomaly.parse_quantile_rule("q97.5") == 97.5
+    assert anomaly.parse_quantile_rule("q05") == 5.0
+    assert anomaly.parse_quantile_rule("extreme_iqr") is None
+    assert anomaly.parse_quantile_rule("qx") is None
+
+
+@pytest.mark.parametrize("rule", ["q0", "q100", "q-3", "q250"])
+def test_degenerate_quantile_percent_rejected(rule):
+    with pytest.raises(ValueError, match=r"\(0, 100\)"):
+        anomaly.threshold(jnp.ones(10), rule)
+
+
+@pytest.mark.parametrize("rule", ["q90", "unusual_iqr", "extreme_iqr"])
+def test_nan_masked_errors_threshold_over_valid_only(rule):
+    errs = np.arange(1, 101, dtype=np.float32)
+    masked = np.concatenate([errs, np.full(40, np.nan, np.float32)])
+    rng = np.random.default_rng(0)
+    rng.shuffle(masked)
+    clean = anomaly.threshold(jnp.asarray(errs), rule)
+    padded = anomaly.threshold(jnp.asarray(masked), rule)
+    assert not np.isnan(padded)
+    np.testing.assert_allclose(padded, clean, rtol=1e-6)
+
+
 def test_binary_metrics():
     pred = jnp.asarray([1, 1, 0, 0, 1, 0])
     truth = jnp.asarray([1, 0, 0, 1, 1, 0])

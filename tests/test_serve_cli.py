@@ -1,0 +1,70 @@
+"""CLI argument-validation tests for `repro.launch.serve`.
+
+These pin message <-> check agreement: several flags use 0 as a "mode off"
+sentinel, and the error messages must state the exact accepted domain (a
+message promising ">= 1" while the check admits 0 lies to the user — the
+pre-fix messages did exactly that).
+"""
+import pytest
+
+from repro.launch import serve
+
+
+def cli_error(argv, capsys, monkeypatch) -> str:
+    monkeypatch.setattr("sys.argv", ["serve.py"] + argv)
+    with pytest.raises(SystemExit) as exc:
+        serve.main()
+    assert exc.value.code == 2
+    return capsys.readouterr().err
+
+
+def test_fleet_negative_message_states_zero_sentinel(capsys, monkeypatch):
+    err = cli_error(["--fleet", "-1"], capsys, monkeypatch)
+    assert ">= 1, or 0 to serve an LM instead" in err
+    assert "got -1" in err
+
+
+def test_fleet_zero_is_lm_mode_not_an_error(capsys, monkeypatch):
+    # 0 is the documented sentinel: the only complaint is the missing arch.
+    err = cli_error(["--fleet", "0"], capsys, monkeypatch)
+    assert "--arch is required" in err
+    assert "--fleet must" not in err
+
+
+def test_mesh_tenants_negative_message(capsys, monkeypatch):
+    err = cli_error(["--fleet", "4", "--mesh-tenants", "-2"],
+                    capsys, monkeypatch)
+    assert ">= 1, or 0 to disable tenant sharding" in err
+
+
+def test_chunk_samples_negative_message(capsys, monkeypatch):
+    err = cli_error(["--fleet", "4", "--chunk-samples", "-3"],
+                    capsys, monkeypatch)
+    assert ">= 1, or 0 for one-shot (non-streaming) training" in err
+
+
+def test_async_rounds_negative_message(capsys, monkeypatch):
+    err = cli_error(["--async-rounds", "-1"], capsys, monkeypatch)
+    assert ">= 1, or 0 for LM/fleet mode" in err
+
+
+def test_rounds_and_tile_width_require_positive(capsys, monkeypatch):
+    err = cli_error(["--fleet", "4", "--rounds", "0"], capsys, monkeypatch)
+    assert "--rounds must be >= 1" in err
+    err = cli_error(["--fleet", "4", "--tile-width", "0"],
+                    capsys, monkeypatch)
+    assert "--tile-width must be >= 1" in err
+
+
+def test_mode_flags_require_fleet(capsys, monkeypatch):
+    err = cli_error(["--mesh-tenants", "2"], capsys, monkeypatch)
+    assert "--mesh-tenants only applies to --fleet mode" in err
+    err = cli_error(["--async-rounds", "2", "--fleet", "4"],
+                    capsys, monkeypatch)
+    assert "separate modes" in err
+
+
+def test_bad_packing_choice_rejected(capsys, monkeypatch):
+    err = cli_error(["--fleet", "4", "--packing", "ragged"],
+                    capsys, monkeypatch)
+    assert "--packing" in err
