@@ -150,7 +150,7 @@ def main(sites: int, rounds: int) -> dict:
         if frac == 0.0:
             diff = max(
                 float(jnp.max(jnp.abs(a - b)))
-                for a, b in zip(model.weights, sync_model.weights)
+                for a, b in zip(model.weights, sync_model.weights, strict=True)
             )
             parity = {"max_abs_weight_diff": diff}
             print(f"parity (all report, max_staleness=0): max |dw| {diff:.2e}")

@@ -48,7 +48,7 @@ def section_federated() -> list[str]:
     fed = engine.session().round(parts)
     cen = engine.fit(jnp.asarray(x))
     max_diff = max(
-        float(jnp.abs(a - b).max()) for a, b in zip(fed.weights, cen.weights)
+        float(jnp.abs(a - b).max()) for a, b in zip(fed.weights, cen.weights, strict=True)
     )
     upd = federated.publish(daef.fit(cfg, parts[0]))
     raw_bytes = parts[0].nbytes

@@ -60,7 +60,7 @@ def bench_shapes(repeats: int) -> list[dict]:
             runs[backend] = _timed(lambda: fn(xa, fsq, fd), repeats)
         err = max(
             float(jnp.max(jnp.abs(a - b)))
-            for a, b in zip(outs["einsum"], outs["fused"])
+            for a, b in zip(outs["einsum"], outs["fused"], strict=True)
         )
         gflop = 2 * o * m * m * n / 1e9
         rec = {

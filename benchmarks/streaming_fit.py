@@ -92,7 +92,7 @@ def bench_solve(repeats: int) -> list[dict]:
                  for k, f in fns.items()}
         err = max(
             float(jnp.max(jnp.abs(a - b)))
-            for a, b in zip(outs["chol"], outs["eigh"])
+            for a, b in zip(outs["chol"], outs["eigh"], strict=True)
         )
         rec = {
             "shape": {"m": m + 1, "o": o},  # +1: bias row of the augmented G

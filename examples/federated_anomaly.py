@@ -59,7 +59,7 @@ def main() -> None:
     fed = sync.round(parts)
     cen = engine.fit(jnp.asarray(x_train))
     print(f"federated F1: {f1_of(fed):.3f}   centralized F1: {f1_of(cen):.3f}")
-    wd = max(float(jnp.abs(a - b).max()) for a, b in zip(fed.weights, cen.weights))
+    wd = max(float(jnp.abs(a - b).max()) for a, b in zip(fed.weights, cen.weights, strict=True))
     print(f"max weight difference federated vs centralized: {wd:.2e}")
 
 

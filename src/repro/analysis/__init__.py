@@ -1,0 +1,39 @@
+"""Repo-specific correctness tooling: static analysis + runtime auditors.
+
+The performance story of this codebase rests on invariants that ordinary
+tests don't see — a finite traced-shape set in the serving packer, one
+retrace per layer step in streaming training, buffer donation on the hot
+accumulators, env/config resolution *before* trace time.  This package
+turns each of those conventions into a checked fact:
+
+* :mod:`repro.analysis.lint` — an AST-based linter with repo-specific
+  rules (``RPR001``..``RPR006``: deprecated pre-engine entry points,
+  env reads at import/trace time, host ``np.*`` on traced values, Python
+  control flow on tracers, blanket warning filters, wall-clock/stdlib
+  randomness in library code).  ``python -m repro.analysis <paths>`` is
+  the CI entry point.
+* :mod:`repro.analysis.retrace` — :func:`trace_guard`, a runtime
+  trace/compile budget auditor built on JAX's monitoring events, so tests
+  can assert "zero retraces after warmup" and "trace count flat in the
+  number of chunks".
+* :mod:`repro.analysis.donation` — :func:`~repro.analysis.donation.probe`,
+  a one-time donation verifier that inspects the compiled executable's
+  input-output aliasing instead of suppressing the "donated buffers were
+  not usable" warning at every call site.
+
+See docs/analysis.md for the rule catalogue and worked examples.
+"""
+from repro.analysis.donation import DonationReport, probe
+from repro.analysis.lint import Finding, check_path, check_source
+from repro.analysis.retrace import TraceBudgetExceeded, TraceReport, trace_guard
+
+__all__ = [
+    "DonationReport",
+    "probe",
+    "Finding",
+    "check_path",
+    "check_source",
+    "TraceBudgetExceeded",
+    "TraceReport",
+    "trace_guard",
+]

@@ -1,0 +1,186 @@
+"""Donation verification: does ``donate_argnums`` actually alias here?
+
+Buffer donation is a *request*: whether the compiled executable reuses a
+donated input's buffer for an output depends on the backend and on
+shape/layout agreement.  Backends that cannot honour it warn
+("Some donated buffers were not usable") at trace time — which this repo
+used to suppress at every hot call site, hiding the one fact that
+matters: on THIS backend, does the hot accumulator/tile buffer donate or
+copy?
+
+:func:`probe` replaces suppression with a one-time probed fact.  It
+lowers and compiles the jitted function for representative arguments and
+reads the answer out of the executable itself:
+
+* the *requested* donations from ``Lowered.args_info`` (the flat input
+  indices the caller marked ``donate_argnums``) — read from jit metadata,
+  not the IR, because a donation the backend cannot use is silently
+  dropped during lowering and leaves no ``tf.aliasing_output`` attr;
+* the *effective* aliases from the compiled module's
+  ``input_output_alias`` configuration (what XLA actually committed to).
+
+    >>> rep = probe(jitted_step, g0, chunk)      # jitted_step donates g0
+    >>> rep.requested, rep.effective_params, rep.ok
+    ((0,), (0,), True)
+    >>> print(rep.describe())
+
+The result is per call site *and* per backend — probe once at startup,
+log the fact, and stop filtering warnings in the serving loop
+(``repro.serving.server`` does exactly this).
+"""
+from __future__ import annotations
+
+import re
+import warnings
+from dataclasses import dataclass
+
+import jax
+
+DONATION_WARNING = "Some donated buffers were not usable"
+
+#: StableHLO parameter annotation marking a donation that *survived*
+#: lowering, e.g. ``%arg2: tensor<4x4xf32> {tf.aliasing_output = 0 : i32}``.
+#: Fallback source for ``requested`` when ``args_info`` is unavailable.
+_REQUESTED_RE = re.compile(
+    r"%arg(\d+):[^%]*?tf\.aliasing_output\s*=\s*(\d+)"
+)
+#: Compiled-HLO header entries, e.g.
+#: ``input_output_alias={ {}: (0, {}, may-alias), {1}: (2, {}, must-alias) }``.
+_EFFECTIVE_RE = re.compile(
+    r"\{[\d,\s]*\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*(may-alias|must-alias)\)"
+)
+
+
+@dataclass(frozen=True)
+class DonationReport:
+    """Outcome of one donation probe at one call site on one backend."""
+
+    fn_name: str
+    backend: str
+    requested: tuple[int, ...]        # flat input indices asked to donate
+    effective_params: tuple[int, ...] | None  # flat input indices aliased
+    kinds: tuple[str, ...]            # may-alias / must-alias per effective
+    warned: bool                      # the not-usable warning fired
+
+    @property
+    def ok(self) -> bool | None:
+        """True iff every requested donation is honoured; None when the
+        compiled aliasing could not be read on this backend.
+
+        ``requested`` comes from jit metadata, so a donation silently
+        dropped at lowering still shows up as requested-but-not-effective.
+        ``warned`` alone also forces False: it only fires on a genuine
+        drop (though it can be *absent* when the tracing cache is warm).
+        """
+        if self.warned:
+            return False
+        if self.effective_params is None:
+            return None
+        return set(self.requested) <= set(self.effective_params)
+
+    @property
+    def dropped(self) -> tuple[int, ...]:
+        """Requested-but-not-honoured flat input indices."""
+        if self.effective_params is None:
+            return ()
+        return tuple(sorted(set(self.requested) - set(self.effective_params)))
+
+    def describe(self) -> str:
+        """One log-line summary of the probed fact."""
+        if self.warned:
+            state = ("NOT effective (backend dropped donated buffers at "
+                     "lowering: output shapes/layouts cannot reuse them)")
+        elif self.effective_params is None:
+            state = "unknown (executable aliasing not readable)"
+        elif self.ok:
+            state = (f"effective ({len(self.requested)}/{len(self.requested)}"
+                     " donated inputs aliased to outputs)")
+        else:
+            state = (f"NOT effective (inputs {self.dropped} copy instead of "
+                     "alias)")
+        return (f"donation probe [{self.fn_name} on {self.backend}]: {state}")
+
+
+def _requested_from_lowered(lowered) -> tuple[int, ...]:
+    """Flat input indices marked for donation.
+
+    Primary source: ``Lowered.args_info`` — jit metadata that survives
+    both a warm tracing cache and an unusable-donation drop.  Fallback:
+    the ``tf.aliasing_output`` attrs in the StableHLO text (which only
+    reflect donations lowering was able to keep).
+    """
+    try:
+        flat = jax.tree_util.tree_leaves(lowered.args_info)
+        return tuple(i for i, a in enumerate(flat)
+                     if getattr(a, "donated", False))
+    except AttributeError:  # pragma: no cover - older jax.stages API
+        return tuple(sorted(int(m.group(1))
+                            for m in _REQUESTED_RE.finditer(lowered.as_text())))
+
+
+def _effective_from_compiled(compiled_text: str
+                             ) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    header = compiled_text.split("\n", 1)[0]
+    hits = _EFFECTIVE_RE.findall(header)
+    params = tuple(sorted(int(p) for p, _ in hits))
+    kinds = tuple(k for _, k in hits)
+    return params, kinds
+
+
+def probe(fn, *args, **kwargs) -> DonationReport:
+    """Probe whether ``fn``'s donations take effect for these arguments.
+
+    ``fn`` must be a jitted callable (it needs ``.lower``); ``args`` /
+    ``kwargs`` are representative — shapes and dtypes decide the answer.
+    The probe compiles once (sharing the jit *tracing* cache with real
+    calls) and never executes the function; the donation warning, if the
+    backend emits one, is absorbed into the report instead of reaching
+    the caller.
+    """
+    if not hasattr(fn, "lower"):
+        raise TypeError(
+            f"probe needs a jitted callable with .lower(); got {fn!r} — "
+            "wrap it in jax.jit(..., donate_argnums=...) first"
+        )
+    name = getattr(fn, "__name__", str(fn))
+    backend = jax.default_backend()
+    warned = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.filterwarnings("always", message=DONATION_WARNING)
+        lowered = fn.lower(*args, **kwargs)
+        requested = _requested_from_lowered(lowered)
+        compiled = lowered.compile()
+        warned = any(DONATION_WARNING in str(w.message) for w in caught)
+    try:
+        effective, kinds = _effective_from_compiled(compiled.as_text())
+    except Exception:  # pragma: no cover - backend without readable HLO
+        effective, kinds = None, ()
+    return DonationReport(
+        fn_name=name, backend=backend, requested=requested,
+        effective_params=effective, kinds=kinds, warned=warned,
+    )
+
+
+def suppress_unusable_donation_warning() -> None:
+    """The single sanctioned filter for the not-usable donation warning.
+
+    Installed (message-scoped) *after* a probe has recorded that this
+    backend does not honour donation — the fact is logged, so the
+    per-trace warning is pure noise from then on.  Never call this
+    without probing first; blanket ignores are exactly what RPR005
+    exists to reject.
+
+    Idempotence is checked against ``warnings.filters`` itself rather
+    than a module flag: test runners (pytest) reset the filter list
+    around each test, and a stale "already installed" flag would leave
+    the warning unsuppressed afterwards.
+    """
+    for action, msg, _cat, _mod, _line in warnings.filters:
+        if action == "ignore" and msg is not None \
+                and msg.pattern == DONATION_WARNING:
+            return
+    warnings.filterwarnings("ignore", message=DONATION_WARNING)
+
+
+__all__ = ["DonationReport", "probe", "suppress_unusable_donation_warning",
+           "DONATION_WARNING"]

@@ -245,7 +245,7 @@ def _stream_forward(config: DAEFConfig, x: Array, weights, biases) -> Array:
     far (all hidden activations) — the recompute-on-the-fly of each pass."""
     f_hl, _ = _acts(config)
     h = f_hl.fn(weights[0].T @ x)
-    for w, b in zip(weights[1:], biases):
+    for w, b in zip(weights[1:], biases, strict=True):
         h = f_hl.fn(w.T @ h + b[:, None])
     return h
 
@@ -559,7 +559,7 @@ def predict(config: DAEFConfig, model: DAEFModel, x: Array) -> Array:
     """Alg. 3 — reconstruct test samples x [m0, n]."""
     f_hl, f_ll = _acts(config)
     h = f_hl.fn(model.weights[0].T @ x)  # encoder: no bias
-    for w, b in zip(model.weights[1:-1], model.biases[:-1]):
+    for w, b in zip(model.weights[1:-1], model.biases[:-1], strict=True):
         h = f_hl.fn(w.T @ h + b[:, None])
     w, b = model.weights[-1], model.biases[-1]
     return f_ll.fn(w.T @ h + b[:, None])
@@ -618,7 +618,7 @@ def merge_knowledge(
     merge = rolann.merge_stats if config.method == "gram" else rolann.merge_factors
     enc = dsvd.merge_pair(a.encoder_factors, b.encoder_factors)
     knowledge = tuple(
-        merge(ka, kb) for ka, kb in zip(a.layer_knowledge, b.layer_knowledge)
+        merge(ka, kb) for ka, kb in zip(a.layer_knowledge, b.layer_knowledge, strict=True)
     )
     errors = jnp.concatenate([a.train_errors, b.train_errors])
     return enc, knowledge, errors

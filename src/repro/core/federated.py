@@ -150,7 +150,7 @@ def _federated_fit(
     locals_ = [
         rolann.compute_stats(h, p, f_ll, backend=config.stats_backend) if use_gram
         else rolann.compute_factors(h, p, f_ll)
-        for h, p in zip(hs, partitions)
+        for h, p in zip(hs, partitions, strict=True)
     ]
     k_ll = _aggregate(locals_, use_gram)
     w_ll, b_ll = rolann.solve(k_ll, config.lam_last,
@@ -161,7 +161,7 @@ def _federated_fit(
 
     errors = [
         jnp.mean((f_ll.fn(w_ll.T @ h + b_ll[:, None]) - p) ** 2, axis=0)
-        for h, p in zip(hs, partitions)
+        for h, p in zip(hs, partitions, strict=True)
     ]
     return daef.DAEFModel(
         weights=tuple(weights),
@@ -193,7 +193,7 @@ def merge_exchange_states(config: daef.DAEFConfig, states: Sequence[tuple]):
     enc, knw, _ = states[0]
     for enc_b, knw_b, _ in states[1:]:
         enc = dsvd.merge_pair(enc, enc_b)
-        knw = tuple(merge(ka, kb) for ka, kb in zip(knw, knw_b))
+        knw = tuple(merge(ka, kb) for ka, kb in zip(knw, knw_b, strict=True))
     errs = jnp.concatenate([jnp.asarray(e) for _, _, e in states])
     return enc, knw, errs
 

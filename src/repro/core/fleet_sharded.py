@@ -292,7 +292,7 @@ def _merge_pair_knowledge(config: daef.DAEFConfig):
 
     def pair(a, b):
         enc = dsvd.merge_pair(a[0], b[0])
-        knw = tuple(merge(ka, kb) for ka, kb in zip(a[1], b[1]))
+        knw = tuple(merge(ka, kb) for ka, kb in zip(a[1], b[1], strict=True))
         return enc, knw
 
     return pair

@@ -161,7 +161,7 @@ def _gram_stats_acc_fn(backend: str):
                 arg[None], (axis_size, *arg.shape)
             )
 
-        args = [lift(a, b) for a, b in zip((g, m, xa, fsq, fd), in_batched)]
+        args = [lift(a, b) for a, b in zip((g, m, xa, fsq, fd), in_batched, strict=True)]
         return gram_stats_acc_batched(*args, backend=backend), (True, True)
 
     return f

@@ -235,6 +235,7 @@ class FederationSession:
             for site, state in zip(
                 [s for s, _ in named],
                 self._local_states([p for _, p in named]),
+                strict=True,
             ):
                 rec = self._ledger.get(site)
                 if rec is None:

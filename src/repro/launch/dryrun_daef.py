@@ -99,7 +99,7 @@ def run_one(method: str, *, d: int = 2048, n: int = 1 << 22,
         sizes = cfg.layer_sizes
         useful = 2.0 * sizes[0] ** 2 * n                       # encoder gram
         h_dims = [sizes[1]] + list(sizes[2:-1])
-        for m_in, m_out in zip(h_dims, list(sizes[2:-1]) + [sizes[-1]]):
+        for m_in, m_out in zip(h_dims, list(sizes[2:-1]) + [sizes[-1]], strict=True):
             # stage-1 projection + per-output gram (hidden) or shared (last)
             per_out = m_out if m_out != sizes[-1] else 1
             useful += 2.0 * m_in * m_out * n

@@ -20,10 +20,16 @@ from repro.configs.base import ArchConfig
 from repro.models import attention as attn_mod
 from repro.models import common, hints, mla, moe
 
-# §Perf experiment (env-gated; defaults unchanged): shard the residual
-# stream's sequence dim over the model axis between blocks (Megatron-SP
-# style) — norms/router/expert math are pointwise over S, attention gathers.
-_SEQ_SHARD = os.environ.get("REPRO_SEQ_SHARD", "0") == "1"
+
+def _seq_shard() -> bool:
+    """§Perf experiment (env-gated; defaults unchanged): shard the residual
+    stream's sequence dim over the model axis between blocks (Megatron-SP
+    style) — norms/router/expert math are pointwise over S, attention
+    gathers.  Resolved at call time (the ``stats_backend.resolved()``
+    idiom), never at import, so tests/serving can flip it per-process;
+    callers that jit the forward pass bake the resolved value into that
+    trace and pass ``seq_shard=`` explicitly to override per-call."""
+    return os.environ.get("REPRO_SEQ_SHARD", "0") == "1"
 
 Array = jnp.ndarray
 Params = dict[str, Any]
@@ -98,8 +104,15 @@ def forward(
     *,
     chunked_attn: bool = False,
     remat: bool = True,
+    seq_shard: bool | None = None,
 ) -> tuple[Array, Array]:
-    """Returns (hidden [B,S,d], aux_loss)."""
+    """Returns (hidden [B,S,d], aux_loss).
+
+    ``seq_shard=None`` resolves ``$REPRO_SEQ_SHARD`` when this forward
+    pass runs (or traces) — pass an explicit bool to pin it pre-trace.
+    """
+    if seq_shard is None:
+        seq_shard = _seq_shard()
     h = common.embed(params["embed"], tokens)
 
     def dense_body(h, layer):
@@ -112,7 +125,7 @@ def forward(
     def moe_body(carry, layer):
         h, aux = carry
         h = h + _attn_fwd(layer, cfg, h, chunked_attn)
-        if _SEQ_SHARD:
+        if seq_shard:
             h = hints.hint(h, {0: ("pod", "data"), 1: "model"})
         y, aux_l = moe.moe_ffn(
             layer["moe"], cfg, common.apply_norm(cfg.norm, layer["mlp_norm"], h)

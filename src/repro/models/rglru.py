@@ -232,7 +232,7 @@ def forward(
 
     step = jax.checkpoint(period_body) if remat else period_body
     h, _ = jax.lax.scan(step, h, params["periods"])
-    for blk, kind in zip(params["tail"], tail):
+    for blk, kind in zip(params["tail"], tail, strict=True):
         if kind == "rec":
             h, _ = _rec_fwd(blk, cfg, h)
         else:
@@ -329,7 +329,7 @@ def decode_step(
     new_attn = {k: attn_mod.KVCache(*v) for k, v in new_attn.items()}
 
     new_tail = []
-    for blk, kind, st in zip(params["tail"], tail, cache.tail):
+    for blk, kind, st in zip(params["tail"], tail, cache.tail, strict=True):
         if kind == "rec":
             h, st_new = _rec_fwd(blk, cfg, h, state=st)
         else:

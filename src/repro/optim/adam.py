@@ -75,6 +75,7 @@ def adamw(
                 jax.tree.leaves(state.mu),
                 jax.tree.leaves(state.nu),
                 jax.tree.leaves(params),
+                strict=True,
             )
         ]
         updates = treedef.unflatten([o[0] for o in outs])

@@ -97,7 +97,7 @@ class ScoreCache:
 
     def put_many(self, tenant: int, version: int, hashes, scores) -> None:
         d = self._scores
-        for h, s in zip(hashes, scores):
+        for h, s in zip(hashes, scores, strict=True):
             d[(tenant, version, h)] = s
         self._trim()
 

@@ -24,7 +24,7 @@ See docs/serving.md for the walkthrough.
 """
 from __future__ import annotations
 
-import warnings
+import logging
 from collections import deque
 from functools import partial
 from typing import NamedTuple
@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import donation as donation_mod
 from repro.core import daef, fleet
 from repro.engine.plan import PlanError
 from repro.serving import cache as cache_mod
@@ -41,6 +42,8 @@ from repro.serving.queue import RequestQueue, ScoreRequest
 from repro.serving.recalibration import ErrorSketch
 
 Array = jnp.ndarray
+
+logger = logging.getLogger("repro.serving")
 
 
 @partial(jax.jit, static_argnames=("config",), donate_argnums=(2,))
@@ -120,6 +123,9 @@ class FleetServer:
         self._train_cols = train_errors.shape[-1]
         self._mus: np.ndarray | None = None
         self._mus_dev = None
+        #: One-time donation probe result (filled by `warmup`): does the
+        #: donated tile buffer actually alias on this backend?
+        self.donation: donation_mod.DonationReport | None = None
         self._inflight: deque = deque()
         self._next_id = 0
         self.results: dict[int, ScoreResult] = {}
@@ -150,29 +156,63 @@ class FleetServer:
             self._mus_dev = jnp.asarray(mus)
         return self._mus
 
+    def probe_donation(self) -> donation_mod.DonationReport:
+        """One-time startup probe: does the donated tile buffer alias?
+
+        Inspects the compiled executable's input-output aliasing for the
+        smallest packer tile shape (`repro.analysis.donation`) instead of
+        suppressing the "donated buffers were not usable" warning at every
+        dispatch.  Logs the probed fact once; on a backend that cannot
+        honour donation, installs the single message-scoped filter so the
+        per-shape trace warning doesn't spam warmup/serving.
+        """
+        if self.donation is None:
+            self.thresholds
+            s, t = self.packer.shapes()[0]
+            m0 = self.engine.config.layer_sizes[0]
+            if not hasattr(_score_tile, "lower"):
+                # _score_tile replaced by a test double: nothing to probe.
+                self.donation = donation_mod.DonationReport(
+                    fn_name=getattr(_score_tile, "__name__", "?"),
+                    backend=jax.default_backend(), requested=(),
+                    effective_params=None, kinds=(), warned=False,
+                )
+            else:
+                self.donation = donation_mod.probe(
+                    _score_tile, self.engine.config, self.state.model,
+                    jnp.zeros((s, m0, t), jnp.float32),
+                    jnp.zeros(s, jnp.int32), jnp.zeros(s, jnp.int32),
+                    self._mus_dev,
+                )
+            logger.info("%s", self.donation.describe())
+        if self.donation.ok is False:
+            # Re-asserted on every call: the filter check is trivial and
+            # test runners reset the warnings filter list between tests.
+            donation_mod.suppress_unusable_donation_warning()
+        return self.donation
+
     def warmup(self) -> int:
         """Pre-trace every tile shape the packer can emit.
 
         The packer bounds its shape set to pow2-rounded ``(slots, width)``
         combinations; tracing them all up front moves every compile out of
         the serving path (otherwise the first burst of an unseen shape eats
-        a retrace in its latency).  Returns the number of shapes compiled.
+        a retrace in its latency).  Probes tile-buffer donation once
+        (`probe_donation`) before compiling.  Returns the number of shapes
+        compiled.
         """
         self.thresholds
+        self.probe_donation()
         shapes = self.packer.shapes()
         m0 = self.engine.config.layer_sizes[0]
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
+        for s, t in shapes:
+            errs, flags = _score_tile(
+                self.engine.config, self.state.model,
+                jnp.zeros((s, m0, t), jnp.float32),
+                jnp.zeros(s, jnp.int32), jnp.zeros(s, jnp.int32),
+                self._mus_dev,
             )
-            for s, t in shapes:
-                errs, flags = _score_tile(
-                    self.engine.config, self.state.model,
-                    jnp.zeros((s, m0, t), jnp.float32),
-                    jnp.zeros(s, jnp.int32), jnp.zeros(s, jnp.int32),
-                    self._mus_dev,
-                )
-            jax.block_until_ready(errs)
+        jax.block_until_ready(errs)
         return len(shapes)
 
     # ------------------------------------------------------------------
@@ -235,19 +275,16 @@ class FleetServer:
         tile = self.packer.pack(self.queue)
         if tile is None:
             return False
+        self.probe_donation()  # cached after the first call (or warmup())
         self.thresholds  # materialize mus for this version
-        with warnings.catch_warnings():
-            # Backends without buffer donation (CPU) warn at trace time
-            # that the donated tile buffer was not usable; where donation
-            # IS supported the next tile reuses it.
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
-            )
-            errs, flags = _score_tile(
-                self.engine.config, self.state.model, jnp.asarray(tile.x),
-                jnp.asarray(tile.slot_tenants), jnp.asarray(tile.n_valid),
-                self._mus_dev,
-            )
+        # No warning filtering here: whether the donated tile buffer
+        # aliases on this backend is a probed, logged fact
+        # (`probe_donation`), not a per-dispatch suppression.
+        errs, flags = _score_tile(
+            self.engine.config, self.state.model, jnp.asarray(tile.x),
+            jnp.asarray(tile.slot_tenants), jnp.asarray(tile.n_valid),
+            self._mus_dev,
+        )
         self.stats["dispatches"] += 1
         self.stats["dispatched_cols"] += int(np.prod(tile.x.shape[::2]))
         self._inflight.append((tile, errs, flags))

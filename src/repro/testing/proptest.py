@@ -90,7 +90,7 @@ except ImportError:
                     rows.append([s.draw(rng) for s in strats])
                 for row in rows[:max_examples]:
                     pos = row[: len(arg_strats)]
-                    kw = dict(zip(names, row[len(arg_strats):]))
+                    kw = dict(zip(names, row[len(arg_strats):], strict=True))
                     fn(*pos, **kw)
 
             # functools.wraps sets __wrapped__, which would make pytest

@@ -1,0 +1,25 @@
+"""RPR001 fixture: deprecated pre-engine entry points, plus escapes."""
+from repro.core import fleet, fleet_sharded
+from repro.core.federated import federated_fit
+
+
+def bad_direct(cfg, xs, seeds):
+    return fleet.fleet_fit(cfg, xs, seeds=seeds)            # line 7: RPR001
+
+
+def bad_imported_name(cfg, parts):
+    return federated_fit(cfg, parts)                        # line 11: RPR001
+
+
+def bad_two_on_one_line(cfg, xs, mesh, seeds):
+    a = fleet.fleet_fit(cfg, xs, seeds=seeds); b = fleet_sharded.sharded_fleet_fit(cfg, xs, mesh)  # line 15: RPR001 x2  # noqa: E501,E702
+    return a, b
+
+
+def escaped(cfg, xs, seeds):
+    return fleet.fleet_fit(cfg, xs, seeds=seeds)  # repro-lint: disable=RPR001
+
+
+def clean_mentions_only():
+    """fleet_fit in prose (and as a bare attribute) is not a call."""
+    return fleet.fleet_fit

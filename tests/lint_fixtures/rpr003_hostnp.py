@@ -1,0 +1,32 @@
+"""RPR003 fixture: host numpy applied to traced values."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_np_on_param(x):
+    return np.asarray(x) + 1.0                               # line 11: RPR003
+
+
+@partial(jax.jit, static_argnames=("k",))
+def bad_np_on_derived(x, k):
+    y = x * k
+    return np.mean(y, axis=0)                                # line 17: RPR003
+
+
+@jax.jit
+def clean_np_on_static(x):
+    shape_prod = np.prod(x.shape)        # .shape is static, allowed
+    return x.reshape(-1) / shape_prod
+
+
+@jax.jit
+def clean_np_constants(x):
+    return x * np.float32(2.0) + np.pi   # no traced value enters np
+
+
+def clean_np_outside_jit(x):
+    return np.asarray(x).sum()

@@ -1,0 +1,40 @@
+"""RPR004 fixture: python control flow on traced values."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_if_on_param(x):
+    if x.sum() > 0:                                          # line 10: RPR004
+        return x
+    return -x
+
+
+@jax.jit
+def bad_while_on_derived(x):
+    acc = x * 2
+    while acc.max() < 1.0:                                   # line 18: RPR004
+        acc = acc * 2
+    return acc
+
+
+@partial(jax.jit, static_argnames=("config",))
+def clean_if_on_static(config, x):
+    if config:                       # static argname, allowed
+        return jnp.tanh(x)
+    return x
+
+
+@jax.jit
+def clean_if_on_shape(x):
+    if x.shape[0] > 2 and len(x.shape) == 2 and isinstance(x, jax.Array):
+        return x.T
+    return x
+
+
+def clean_if_outside_jit(x):
+    if x.sum() > 0:
+        return x
+    return -x

@@ -1,0 +1,28 @@
+"""RPR005 fixture: blanket warning filters vs message-scoped ones."""
+import warnings
+
+
+def bad_blanket_ignore():
+    warnings.filterwarnings("ignore")                        # line 6: RPR005
+
+
+def bad_blanket_simplefilter():
+    warnings.simplefilter("ignore")                          # line 10: RPR005
+
+
+def bad_action_kwarg():
+    warnings.filterwarnings(action="ignore")                 # line 14: RPR005
+
+
+def clean_message_scoped():
+    warnings.filterwarnings("ignore", message="Some donated buffers")
+
+
+def clean_category_scoped():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+def clean_non_ignore():
+    warnings.simplefilter("always")
+    warnings.filterwarnings("error")

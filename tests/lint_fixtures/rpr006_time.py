@@ -1,0 +1,27 @@
+# repro-lint: library
+"""RPR006 fixture: wall-clock and host RNG in library code."""
+import random
+import time
+
+import numpy as np
+
+
+def bad_wall_clock():
+    return time.time()                                       # line 10: RPR006
+
+
+def bad_perf_counter():
+    t0 = time.perf_counter()                                 # line 14: RPR006
+    return t0
+
+
+def bad_stdlib_random():
+    return random.random() + random.randint(0, 3)            # line 19: RPR006 x2
+
+
+def clean_numpy_rng(seed):
+    return np.random.default_rng(seed).normal()
+
+
+def clean_sleepless(x):
+    return time.strftime  # attribute mention, not a wall-clock read

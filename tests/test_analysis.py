@@ -1,0 +1,296 @@
+"""Tests for the repro.analysis tooling itself.
+
+* lint: every fixture module under tests/lint_fixtures/ carries
+  ``# line N: RPRnnn`` markers on its seeded violations — the linter must
+  report exactly those (rule, line) pairs and nothing else, honour the
+  inline ``# repro-lint: disable=`` escape, and subtract/report the
+  baseline correctly.  The repo itself must lint clean against the
+  committed baseline (the CI acceptance criterion).
+* retrace: trace_guard counts cold traces, reports zero when warm, and
+  raises TraceBudgetExceeded over budget.
+* donation: probe() reads requested-vs-effective aliasing out of the
+  lowered/compiled executable.
+"""
+import re
+import subprocess
+import sys
+import warnings
+from collections import Counter
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import donation, lint, retrace
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "lint_fixtures"
+
+MARKER_RE = re.compile(r"# line (\d+): (RPR\d{3})(?: x(\d+))?")
+
+
+def expected_findings(path: Path) -> Counter:
+    """(line, rule) -> count, from the fixture's own marker comments."""
+    want: Counter = Counter()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = MARKER_RE.search(line)
+        if m:
+            assert int(m.group(1)) == i, f"{path.name}: stale marker on {i}"
+            want[(i, m.group(2))] += int(m.group(3) or 1)
+    return want
+
+
+@pytest.mark.parametrize("fixture", sorted(FIXTURES.glob("rpr*.py")),
+                         ids=lambda p: p.stem)
+def test_fixture_findings_exact(fixture):
+    got = Counter((f.line, f.rule) for f in lint.check_path(fixture))
+    assert got == expected_findings(fixture), (
+        f"{fixture.name}: findings != markers\n"
+        + "\n".join(f.format() for f in lint.check_path(fixture))
+    )
+
+
+def test_disable_comment_suppresses_only_that_line():
+    src = (
+        "from repro.core import fleet\n"
+        "a = fleet.fleet_fit(1)  # repro-lint: disable=RPR001\n"
+        "b = fleet.fleet_fit(2)\n"
+        "c = fleet.fleet_fit(3)  # repro-lint: disable=RPR002\n"
+    )
+    findings = lint.check_source(src)
+    assert [(f.line, f.rule) for f in findings] == [(3, "RPR001"),
+                                                    (4, "RPR001")]
+
+
+def test_disable_comment_multiple_rules():
+    src = (
+        "import warnings\n"
+        "from repro.core.fleet import fleet_fit\n"
+        "warnings.filterwarnings('ignore'); fleet_fit(0)"
+        "  # repro-lint: disable=RPR005, RPR001\n"
+    )
+    assert lint.check_source(src) == []
+
+
+def test_library_scope_by_marker_and_path():
+    src = "import os\nFLAG = os.environ.get('X')\n"
+    # Plain file: import-time env read allowed (drivers do this).
+    assert lint.check_source(src, path="tools/whatever.py") == []
+    # Library path: flagged.
+    assert [f.rule for f in lint.check_source(
+        src, path="src/repro/core/newmod.py")] == ["RPR002"]
+    # Marker opts any file in.
+    marked = "# repro-lint: library\n" + src
+    assert [f.rule for f in lint.check_source(marked, path="x.py")] == ["RPR002"]
+    # launch/ is driver territory.
+    assert lint.check_source(src, path="src/repro/launch/newtool.py") == []
+
+
+def test_rpr004_static_argnums_positional():
+    src = (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.jit, static_argnums=(0,))\n"
+        "def f(mode, x):\n"
+        "    if mode:\n"
+        "        return x\n"
+        "    if (x > 0).all():\n"
+        "        return -x\n"
+        "    return x\n"
+    )
+    findings = lint.check_source(src)
+    assert [(f.line, f.rule) for f in findings] == [(7, "RPR004")]
+
+
+def test_rpr003_taint_through_nested_def():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def outer(x):\n"
+        "    def body(carry, xs):\n"
+        "        return carry, np.square(xs)\n"
+        "    return jax.lax.scan(body, x, x)\n"
+    )
+    assert [(f.line, f.rule) for f in lint.check_source(src)] == [
+        (6, "RPR003")
+    ]
+
+
+def test_syntax_error_reported_not_raised():
+    findings = lint.check_source("def broken(:\n", path="bad.py")
+    assert len(findings) == 1 and findings[0].rule == "RPR000"
+
+
+# ---------------------------------------------------------------------------
+# Baseline behaviour
+# ---------------------------------------------------------------------------
+
+def _fake_findings(path, rule, lines):
+    return [lint.Finding(path=path, line=ln, col=1, rule=rule,
+                         message="m", hint="h") for ln in lines]
+
+
+def test_baseline_subtracts_counts_and_flags_new(tmp_path):
+    base = tmp_path / "base"
+    base.write_text("pkg/a.py RPR001 2\n# comment\n\npkg/b.py RPR005 1\n")
+    counts = lint.load_baseline(base)
+    findings = _fake_findings("pkg/a.py", "RPR001", [3, 9, 12]) + \
+        _fake_findings("pkg/b.py", "RPR005", [4])
+    kept, stale = lint.apply_baseline(findings, counts)
+    # 2 of 3 RPR001 grandfathered -> the third (newest line) remains.
+    assert [(f.path, f.line) for f in kept] == [("pkg/a.py", 12)]
+    assert not stale
+
+
+def test_baseline_stale_entries_reported(tmp_path):
+    base = tmp_path / "base"
+    base.write_text("pkg/a.py RPR001 3\npkg/gone.py RPR006 1\n")
+    kept, stale = lint.apply_baseline(
+        _fake_findings("pkg/a.py", "RPR001", [3]), lint.load_baseline(base)
+    )
+    assert kept == []
+    assert stale == Counter({("pkg/a.py", "RPR001"): 2,
+                             ("pkg/gone.py", "RPR006"): 1})
+
+
+def test_baseline_bad_line_rejected(tmp_path):
+    base = tmp_path / "base"
+    base.write_text("not a valid line\n")
+    with pytest.raises(SystemExit, match="bad baseline line"):
+        lint.load_baseline(base)
+
+
+def test_write_then_load_roundtrip(tmp_path):
+    findings = _fake_findings("pkg/a.py", "RPR003", [1, 2]) + \
+        _fake_findings("pkg/a.py", "RPR004", [5])
+    out = tmp_path / "roundtrip"
+    lint.write_baseline(findings, out)
+    assert lint.load_baseline(out) == Counter(
+        {("pkg/a.py", "RPR003"): 2, ("pkg/a.py", "RPR004"): 1}
+    )
+
+
+def test_repo_is_clean_under_committed_baseline():
+    """THE acceptance criterion: the tree lints clean in CI."""
+    rc = lint.main([
+        str(REPO / "src"), str(REPO / "tests"), str(REPO / "benchmarks"),
+        str(REPO / "examples"),
+        "--baseline", str(REPO / "repro-lint.baseline"),
+    ])
+    assert rc == 0
+
+
+def test_cli_exit_codes_and_output():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--no-baseline",
+         str(FIXTURES)],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    # Directory walks skip lint_fixtures by default...
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # ...but explicit files always lint.
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--no-baseline",
+         str(FIXTURES / "rpr005_warnings.py")],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1
+    assert "RPR005" in proc.stdout and "hint:" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# trace_guard
+# ---------------------------------------------------------------------------
+
+def test_trace_guard_counts_cold_then_warm():
+    @jax.jit
+    def poly(x):
+        return x * x + 3.0
+
+    x = jnp.arange(6.0).reshape(2, 3) + 17.0  # unique shape+op mix
+    with retrace.trace_guard() as cold:
+        poly(x).block_until_ready()
+    assert cold.traces >= 1
+    with retrace.trace_guard(max_traces=0) as warm:
+        poly(x).block_until_ready()
+    assert warm.traces == 0 and warm.compiles == 0
+
+
+def test_trace_guard_budget_raises_with_names():
+    @jax.jit
+    def fresh_fn(x):
+        return x + 41.5
+
+    with pytest.raises(retrace.TraceBudgetExceeded, match="budget 0"):
+        with retrace.trace_guard(max_traces=0, what="cold call"):
+            fresh_fn(jnp.ones((3, 5)))
+
+
+def test_trace_guard_nested_sees_own_deltas():
+    @jax.jit
+    def g(x):
+        return x - 2.5
+
+    with retrace.trace_guard() as outer:
+        g(jnp.ones((4, 1)))
+        with retrace.trace_guard(max_traces=0):
+            g(jnp.ones((4, 1)))  # warm inside
+    assert outer.traces >= 1
+
+
+# ---------------------------------------------------------------------------
+# donation probe
+# ---------------------------------------------------------------------------
+
+def test_probe_reads_requested_aliases():
+    def acc_step(cfg, x, y, acc):
+        return acc + x * y
+
+    jf = jax.jit(acc_step, static_argnums=(0,), donate_argnums=(3,))
+    args = (7, jnp.zeros((8, 8)), jnp.zeros((8, 8)), jnp.zeros((8, 8)))
+    rep = donation.probe(jf, *args)
+    # Flat (non-static) inputs are x,y,acc -> acc is flat index 2.
+    assert rep.requested == (2,)
+    assert rep.fn_name == "acc_step"
+    assert rep.backend == jax.default_backend()
+    assert isinstance(rep.describe(), str) and "donation probe" in rep.describe()
+    if rep.effective_params is not None:   # readable HLO on this backend
+        assert rep.ok is (2 in rep.effective_params)
+
+
+def test_probe_no_donation_requested():
+    jf = jax.jit(lambda x: x * 2)
+    rep = donation.probe(jf, jnp.ones((4,)))
+    assert rep.requested == ()
+    assert rep.ok in (True, None)   # nothing requested -> trivially ok
+
+
+def test_probe_detects_donation_dropped_at_lowering():
+    """An unusable donation is dropped during lowering (no aliasing attr
+    survives into the IR) — the probe must still report it as not ok."""
+    jf = jax.jit(lambda big: big.sum(), donate_argnums=(0,))
+    rep = donation.probe(jf, jnp.ones((8, 8)))
+    assert rep.requested == (0,)   # jit metadata, not the (stripped) IR
+    assert rep.ok is False
+    assert "NOT effective" in rep.describe()
+
+
+def test_probe_rejects_unjitted():
+    with pytest.raises(TypeError, match="lower"):
+        donation.probe(lambda x: x, jnp.ones(3))
+
+
+def test_probe_absorbs_donation_warning():
+    """Whatever the backend does, the probe itself must not warn."""
+    def step(acc, x):
+        return acc + x
+
+    jf = jax.jit(step, donate_argnums=(0,))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        donation.probe(jf, jnp.zeros((16, 16)), jnp.ones((16, 16)))
+    assert [str(w.message) for w in rec] == []

@@ -63,10 +63,10 @@ def _reference(cfg, site_blocks):
 
 
 def _assert_models_close(a, b, *, what: str):
-    for wa, wb in zip(a.weights, b.weights):
+    for wa, wb in zip(a.weights, b.weights, strict=True):
         np.testing.assert_allclose(wa, wb, err_msg=f"{what}: weights",
                                    **PARITY)
-    for ba, bb in zip(a.biases, b.biases):
+    for ba, bb in zip(a.biases, b.biases, strict=True):
         np.testing.assert_allclose(ba, bb, err_msg=f"{what}: biases",
                                    **PARITY)
 
@@ -136,7 +136,7 @@ def test_async_empty_round_is_refresh_only():
     before = [np.asarray(w) for w in model.weights]
     model2 = session.round({})                # tick: "a" now stale (bound 0)
     # No fresh site -> the previous live model is kept, not discarded.
-    for w0, w1 in zip(before, model2.weights):
+    for w0, w1 in zip(before, model2.weights, strict=True):
         np.testing.assert_array_equal(w0, np.asarray(w1))
     assert session.staleness("a") == 1 and not session.is_fresh("a")
 
@@ -232,7 +232,7 @@ def test_merge_state_tree_masked_subset_parity():
     enc_t, knw_t = fleet_sharded.merge_state_tree(cfg, enc_b, knw_b, mask)
     subset = [states[i] for i in (0, 2, 3)]
     enc_h, knw_h, _ = federated.merge_exchange_states(cfg, subset)
-    for kt, kh in zip(knw_t, knw_h):
+    for kt, kh in zip(knw_t, knw_h, strict=True):
         np.testing.assert_allclose(kt.g, kh.g, **PARITY)
         np.testing.assert_allclose(kt.m, kh.m, **PARITY)
     # Same total Gram either way -> same factors up to float error.
@@ -284,7 +284,7 @@ def test_merge_after_reduce_commutes():
     merged_then_reduced = engine.reduce(engine.merge(fa, fb), 2)
     for wa, wb in zip(
         reduced_then_merged.model.weights, merged_then_reduced.model.weights
-    ):
+    , strict=True):
         np.testing.assert_allclose(wa, wb, **PARITY)
 
 

@@ -51,7 +51,7 @@ def test_partitioning_invariance():
     m4 = daef.fit(CFG, x, n_partitions=4)
     # Structural equality up to float32 eigh conditioning; predictions agree
     # much tighter than raw weights.
-    for a, b in zip(m1.weights, m4.weights):
+    for a, b in zip(m1.weights, m4.weights, strict=True):
         np.testing.assert_allclose(a, b, atol=3e-2)
     x_test = _manifold_data(n=200, seed=8)
     np.testing.assert_allclose(
@@ -66,7 +66,7 @@ def test_svd_method_matches_gram():
     cfg_svd = dataclasses.replace(CFG, method="svd")
     mg = daef.fit(CFG, x)
     ms = daef.fit(cfg_svd, x)
-    for a, b in zip(mg.weights, ms.weights):
+    for a, b in zip(mg.weights, ms.weights, strict=True):
         np.testing.assert_allclose(a, b, atol=2e-2)
 
 

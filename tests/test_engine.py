@@ -56,7 +56,7 @@ def _data(k: int, n: int, seed: int, dtype=jnp.float32):
 
 
 def _assert_trees_close(a, b, *, what: str, atol=None, rtol=None):
-    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         la, lb = np.asarray(la), np.asarray(lb)
         if not np.issubdtype(la.dtype, np.floating):
             np.testing.assert_array_equal(la, lb, err_msg=what)
@@ -491,33 +491,33 @@ def test_deprecated_entry_points_delegate_and_warn_once():
 
     deprecation._WARNED.discard("fleet.fleet_fit")
     with pytest.warns(DeprecationWarning, match="fleet.fleet_fit"):
-        got = fleet.fleet_fit(cfg, xs, seeds=seeds)
+        got = fleet.fleet_fit(cfg, xs, seeds=seeds)  # repro-lint: disable=RPR001
     _assert_trees_close(got, want, what="fleet_fit shim", atol=0)
     import warnings as _w
 
     with _w.catch_warnings(record=True) as rec:
         _w.simplefilter("always")
-        fleet.fleet_fit(cfg, xs, seeds=seeds)
+        fleet.fleet_fit(cfg, xs, seeds=seeds)  # repro-lint: disable=RPR001
     assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
 
     mesh = fleet_sharded.tenant_mesh(len(jax.devices()) if k % len(jax.devices()) == 0 else 1)
     deprecation._WARNED.discard("fleet_sharded.sharded_fleet_fit")
     with pytest.warns(DeprecationWarning, match="sharded_fleet_fit"):
-        got = fleet_sharded.sharded_fleet_fit(cfg, np.asarray(xs), mesh,
-                                              seeds=seeds)
+        got = fleet_sharded.sharded_fleet_fit(  # repro-lint: disable=RPR001
+            cfg, np.asarray(xs), mesh, seeds=seeds)
     _assert_trees_close(got, want, what="sharded_fleet_fit shim")
 
     x = _data(1, 48, seed=33)[0]
     parts = [x[:, :24], x[:, 24:]]
     deprecation._WARNED.discard("federated.federated_fit")
     with pytest.warns(DeprecationWarning, match="federated_fit"):
-        got = federated.federated_fit(cfg, parts)
+        got = federated.federated_fit(cfg, parts)  # repro-lint: disable=RPR001
     want_fed = federated._federated_fit(cfg, parts)
     _assert_trees_close(got, want_fed, what="federated_fit shim", atol=0)
 
     deprecation._WARNED.discard("sharded.fit_on_mesh")
     mesh1 = DAEFEngine(cfg, ExecutionPlan(mode="mesh", mesh_axes=("data",))).mesh
     with pytest.warns(DeprecationWarning, match="fit_on_mesh"):
-        got = sharded.fit_on_mesh(cfg, x, mesh1, data_axes=("data",))
+        got = sharded.fit_on_mesh(cfg, x, mesh1, data_axes=("data",))  # repro-lint: disable=RPR001
     want_mesh = sharded._fit_on_mesh(cfg, x, mesh1, data_axes=("data",))
     _assert_trees_close(got, want_mesh, what="fit_on_mesh shim", atol=0)

@@ -22,9 +22,9 @@ def test_layer_synchronized_equals_centralized():
     parts = [x[:, i * 1000 : (i + 1) * 1000] for i in range(4)]
     fed = federated.federated_fit(CFG, parts)
     cen = daef.fit(CFG, x)
-    for a, b in zip(fed.weights, cen.weights):
+    for a, b in zip(fed.weights, cen.weights, strict=True):
         np.testing.assert_allclose(a, b, atol=3e-2)
-    for a, b in zip(fed.biases, cen.biases):
+    for a, b in zip(fed.biases, cen.biases, strict=True):
         np.testing.assert_allclose(a, b, atol=3e-2)
     x_test = _x(n=300, seed=5)
     np.testing.assert_allclose(
@@ -38,7 +38,7 @@ def test_layer_synchronized_svd_method():
     parts = [x[:, i::3] for i in range(3)]
     fed = federated.federated_fit(cfg, parts)
     cen = daef.fit(cfg, x)
-    for a, b in zip(fed.weights, cen.weights):
+    for a, b in zip(fed.weights, cen.weights, strict=True):
         np.testing.assert_allclose(a, b, atol=2e-2)
 
 

@@ -22,7 +22,7 @@ def _fleet_data(k=K, m0=M0, n=N, seed=0):
 
 
 def _assert_models_close(a: daef.DAEFModel, b: daef.DAEFModel, atol=1e-5):
-    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         np.testing.assert_allclose(la, lb, atol=atol)
 
 

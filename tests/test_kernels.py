@@ -430,7 +430,7 @@ def test_flash_attention_vjp_matches_autodiff():
     gr = jax.grad(
         lambda q, k, v: (ref_attn(q, k, v) ** 2).sum(), argnums=(0, 1, 2)
     )(q, k, v)
-    for a, b in zip(gk, gr):
+    for a, b in zip(gk, gr, strict=True):
         np.testing.assert_allclose(a, b, atol=2e-5)
 
 

@@ -61,7 +61,7 @@ def _mesh(k: int):
 
 
 def _assert_models_close(a: daef.DAEFModel, b: daef.DAEFModel, *, what: str):
-    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         tol = TOLS[str(np.asarray(la).dtype)]
         np.testing.assert_allclose(
             np.asarray(la), np.asarray(lb), err_msg=what, **tol
@@ -163,7 +163,7 @@ def test_merge_tree_matches_sequential_reduction(method, group):
         got = fleet.get_model(tree, i)
         # Deeper reductions accumulate float error across log2(group) merge
         # rounds; scale the f32 bar accordingly (2e-4 at g=2 .. 8e-4 at g=8).
-        for la, lb in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        for la, lb in zip(jax.tree.leaves(got), jax.tree.leaves(ref), strict=True):
             np.testing.assert_allclose(
                 np.asarray(la), np.asarray(lb),
                 atol=1e-4 * group, rtol=1e-3,

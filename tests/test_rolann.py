@@ -176,10 +176,10 @@ def test_solve_chol_under_vmap():
     ds = [_data(seed=s)[1] for s in range(3)]
     stats = jax.tree.map(
         lambda *leaves: jnp.stack(leaves),
-        *[rolann.compute_stats(x, d, act) for x, d in zip(xs, ds)],
+        *[rolann.compute_stats(x, d, act) for x, d in zip(xs, ds, strict=True)],
     )
     w_v, b_v = jax.vmap(lambda s: rolann.solve(s, 0.2))(stats)
-    for i, (x, d) in enumerate(zip(xs, ds)):
+    for i, (x, d) in enumerate(zip(xs, ds, strict=True)):
         w_i, b_i = rolann.solve(rolann.compute_stats(x, d, act), 0.2)
         np.testing.assert_allclose(np.asarray(w_v[i]), np.asarray(w_i),
                                    atol=1e-5, rtol=1e-5)

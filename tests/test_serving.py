@@ -242,6 +242,7 @@ def test_cached_requests_skip_dispatch_until_version_bump(
         calls.append(1)
         return real(*args, **kwargs)
 
+    spy.lower = real.lower   # keep the lazy donation probe working
     monkeypatch.setattr(server_mod, "_score_tile", spy)
 
     rid = server.submit(2, x)
@@ -336,3 +337,28 @@ def test_percentile_interpolates():
     vals = [1.0, 2.0, 3.0, 4.0]
     assert percentile(vals, 50) == pytest.approx(2.5)
     assert percentile(vals, 95) == pytest.approx(np.percentile(vals, 95))
+
+
+# ----------------------------------------------------------------------
+# Retrace hygiene (acceptance criterion: zero post-warmup retraces)
+# ----------------------------------------------------------------------
+
+def test_no_retrace_after_warmup_mixed_ragged(served):
+    """warmup() pre-traces every packer tile shape; serving any mix of
+    ragged request widths afterwards must hit the jit cache only."""
+    from repro.analysis import retrace
+
+    engine, fl = served
+    server = FleetServer(engine, fl, tile_width=8, rule="q90")
+    server.warmup()
+    rng = np.random.default_rng(11)
+    with retrace.trace_guard(max_traces=0, max_compiles=0,
+                             what="post-warmup fleet serve"):
+        rids = []
+        for rnd, widths in enumerate([(1, 9, 4, 17), (3, 1, 23, 8)]):
+            for t, n in enumerate(widths):
+                x = rng.normal(size=(M0, n)).astype(np.float32)
+                rids.append(server.submit(t, x))
+            server.flush()
+        results = [server.take(rid) for rid in rids]
+    assert all(np.isfinite(r.scores).all() for r in results)

@@ -46,7 +46,7 @@ def _data(k: int, n: int, seed: int, dtype=jnp.float32):
 
 
 def _assert_trees_close(a, b, *, what: str):
-    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         tol = TOLS[str(np.asarray(la).dtype)]
         np.testing.assert_allclose(
             np.asarray(la), np.asarray(lb), err_msg=what, **tol

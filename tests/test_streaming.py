@@ -62,7 +62,7 @@ def _assert_close(a, b, *, what: str):
         rest = model._replace(encoder_factors=None)
         return jax.tree.leaves(rest)
 
-    for la, lb in zip(leaves(a), leaves(b)):
+    for la, lb in zip(leaves(a), leaves(b), strict=True):
         tol = TOLS[str(np.asarray(la).dtype)]
         np.testing.assert_allclose(
             np.asarray(la), np.asarray(lb), err_msg=what, **tol
@@ -210,7 +210,7 @@ def test_chunk_equals_n_is_bit_exact():
     x = _data(1, n, seed=9)[0]
     ref = daef.fit(cfg, x)
     got = daef.fit_chunked(cfg, x, chunk_samples=n)
-    for la, lb in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+    for la, lb in zip(jax.tree.leaves(got), jax.tree.leaves(ref), strict=True):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
@@ -368,3 +368,35 @@ def test_fleet_chunked_routes_through_batched_acc(monkeypatch):
                           what=f"{backend} batched-acc chunked fleet")
     finally:
         stats_backend._gram_stats_acc_fn.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# retrace hygiene: trace count must be flat in the number of chunks
+# ---------------------------------------------------------------------------
+
+def test_chunked_fit_trace_count_flat_in_chunks():
+    """The chunked scan re-uses one traced step regardless of how many
+    chunks the stream is cut into: cold trace counts for 4 chunks and for
+    8 chunks of the same (k, n) must match, and a warm re-run is free."""
+    from repro.analysis import retrace
+
+    k, n = 2, 128
+    cfg = _cfg()
+    xs = _data(k, n, seed=21)
+    seeds = jnp.arange(k)
+
+    jax.clear_caches()
+    with retrace.trace_guard(what="chunk=32 cold") as four:
+        fleet._fit_fleet_chunked(cfg, xs, chunk_samples=32, seeds=seeds)
+
+    jax.clear_caches()
+    with retrace.trace_guard(what="chunk=16 cold") as eight:
+        fleet._fit_fleet_chunked(cfg, xs, chunk_samples=16, seeds=seeds)
+
+    assert four.traces == eight.traces, (
+        f"trace count grew with chunk count: {four.traces} vs "
+        f"{eight.traces} ({eight.traced_names})"
+    )
+    # Same shapes again: everything must come out of the cache.
+    with retrace.trace_guard(max_traces=0, what="chunk=16 warm"):
+        fleet._fit_fleet_chunked(cfg, xs, chunk_samples=16, seeds=seeds)

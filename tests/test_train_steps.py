@@ -34,7 +34,7 @@ def test_microbatch_accumulation_matches_single_batch():
     assert abs(float(l1) - float(l4)) < 1e-3
     d = max(
         float(jnp.abs(a - b).max())
-        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4), strict=True)
     )
     assert d < 5e-3, d
 
@@ -53,7 +53,7 @@ def test_bf16_accumulator_close_to_f32():
     # Updates are ~lr-sized; bf16 accumulation error must stay well below.
     d = max(
         float(jnp.abs(a - b).max())
-        for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p16))
+        for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p16), strict=True)
     )
     assert d < 2e-3, d
 
@@ -65,7 +65,7 @@ def test_clip_norm_limits_update():
     p, _, _ = step(params, opt.init(params), batch)
     d = max(
         float(jnp.abs(a - b).max())
-        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(params))
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(params), strict=True)
     )
     assert d < 1e-5, d  # updates ~ lr * clipped-grad ~ 1e-6
 
