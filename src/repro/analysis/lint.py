@@ -28,13 +28,21 @@ Rules (each finding carries file:line:col, a rule id and a fix hint):
   ``random`` module in library code (``src/repro`` outside ``launch/``):
   library results must be deterministic and trace-safe; wall-clock and
   host RNG belong in drivers and benchmarks.
+* **RPR007** — ``jax.random.PRNGKey(<literal>)`` or the stdlib
+  ``random`` module in privacy code (``src/repro/privacy/``): a
+  hard-coded key makes every DP noise draw predictable (and reused
+  across releases — a catastrophic privacy failure, not a flaky test),
+  and unseeded host RNG is unauditable.  Release keys must be derived
+  per (site, round) from the config seed (``fold_in`` — the
+  ``FederationSession._dp_key`` idiom) and passed IN.
 
 Escapes: append ``# repro-lint: disable=RPR001`` (comma-separate several
 ids) to a line to suppress findings on it, or grandfather existing
 findings in a baseline file of ``path RULE count`` lines (see
 ``--write-baseline``).  A file whose first lines contain
 ``# repro-lint: library`` opts into the library-scoped rules regardless
-of its path.
+of its path; ``# repro-lint: privacy`` does the same for the
+privacy-scoped rule.
 
 CLI::
 
@@ -70,6 +78,7 @@ STATIC_CALLS = {"len", "isinstance", "type", "id", "repr", "str", "hash"}
 
 DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
 LIBRARY_MARK_RE = re.compile(r"#\s*repro-lint:\s*library\b")
+PRIVACY_MARK_RE = re.compile(r"#\s*repro-lint:\s*privacy\b")
 
 RULES = {
     "RPR001": "deprecated pre-engine entry point",
@@ -78,6 +87,7 @@ RULES = {
     "RPR004": "python control flow on a traced value",
     "RPR005": "blanket warnings filter",
     "RPR006": "wall-clock/stdlib random in library code",
+    "RPR007": "fixed PRNG key / host randomness in privacy code",
 }
 
 
@@ -281,9 +291,11 @@ class _TaintWalker:
 # ---------------------------------------------------------------------------
 
 class _Checker(ast.NodeVisitor):
-    def __init__(self, path: str, source: str, *, library: bool):
+    def __init__(self, path: str, source: str, *, library: bool,
+                 privacy: bool = False):
         self.path = path
         self.library = library
+        self.privacy = privacy
         self.findings: list[Finding] = []
         self.imports = _Imports()
         self._fn_stack: list[ast.FunctionDef | ast.AsyncFunctionDef] = []
@@ -444,6 +456,29 @@ class _Checker(ast.NodeVisitor):
                     "use jax.random with an explicit key (or numpy "
                     "default_rng in host-side test/driver code)",
                 )
+
+        if self.privacy:
+            if leaf == "PRNGKey" and node.args and isinstance(
+                node.args[0], ast.Constant
+            ):
+                self.add(
+                    node, "RPR007",
+                    f"hard-coded {callee}({node.args[0].value!r}) in privacy "
+                    "code: a fixed key makes every DP noise draw predictable "
+                    "and REUSED across releases",
+                    "derive the release key per (site, round) from the "
+                    "config seed via fold_in and pass it in "
+                    "(FederationSession._dp_key)",
+                )
+            if self.imports.stdlib_random and callee.startswith("random."):
+                self.add(
+                    node, "RPR007",
+                    f"stdlib {callee}() in privacy code: host RNG is "
+                    "unauditable — noise calibration cannot be verified or "
+                    "reproduced",
+                    "draw noise from jax.random with a keyed, per-release "
+                    "key (or a hash-seeded numpy Generator for secagg masks)",
+                )
         self.generic_visit(node)
 
     # -- RPR004: control flow on tracers -----------------------------------
@@ -479,29 +514,44 @@ def _is_library_path(path: Path) -> bool:
     return False
 
 
+def _is_privacy_path(path: Path) -> bool:
+    parts = path.resolve().parts
+    if "repro" in parts and "src" in parts:
+        sub = parts[parts.index("repro") + 1:]
+        return bool(sub) and sub[0] == "privacy"
+    return False
+
+
 def check_source(source: str, path: str = "<string>",
-                 *, library: bool | None = None) -> list[Finding]:
-    """Lint one source string; ``library`` forces library-scoped rules on
-    or off (default: from the path / the ``# repro-lint: library`` mark)."""
+                 *, library: bool | None = None,
+                 privacy: bool | None = None) -> list[Finding]:
+    """Lint one source string; ``library``/``privacy`` force the scoped
+    rules on or off (default: from the path / the ``# repro-lint:
+    library`` / ``# repro-lint: privacy`` marks)."""
+    head = "\n".join(source.splitlines()[:10])
     if library is None:
-        head = "\n".join(source.splitlines()[:10])
         library = bool(LIBRARY_MARK_RE.search(head)) or \
             _is_library_path(Path(path))
+    if privacy is None:
+        privacy = bool(PRIVACY_MARK_RE.search(head)) or \
+            _is_privacy_path(Path(path))
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:
         return [Finding(path=path, line=e.lineno or 0, col=e.offset or 0,
                         rule="RPR000", message=f"syntax error: {e.msg}",
                         hint="fix the file before linting")]
-    checker = _Checker(path, source, library=library)
+    checker = _Checker(path, source, library=library, privacy=privacy)
     checker.visit(tree)
     return sorted(checker.findings, key=lambda f: (f.line, f.col, f.rule))
 
 
-def check_path(path: str | Path, *, library: bool | None = None) -> list[Finding]:
+def check_path(path: str | Path, *, library: bool | None = None,
+               privacy: bool | None = None) -> list[Finding]:
     """Lint one file on disk."""
     p = Path(path)
-    return check_source(p.read_text(), str(p), library=library)
+    return check_source(p.read_text(), str(p), library=library,
+                        privacy=privacy)
 
 
 SKIP_DIRS = {"lint_fixtures", "__pycache__", ".git", ".ruff_cache",

@@ -24,6 +24,7 @@ import dataclasses
 from typing import Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import daef, dsvd, elm_ae, rolann
 
@@ -196,6 +197,98 @@ def merge_exchange_states(config: daef.DAEFConfig, states: Sequence[tuple]):
         knw = tuple(merge(ka, kb) for ka, kb in zip(knw, knw_b, strict=True))
     errs = jnp.concatenate([jnp.asarray(e) for _, _, e in states])
     return enc, knw, errs
+
+
+# ---------------------------------------------------------------------------
+# Additive wire form of an exchange state (the secure-aggregation hook)
+#
+# Pairwise-masked aggregation (`repro.privacy.secagg`) can only blind
+# statistics that merge by PLAIN SUM.  An exchange state triple is almost
+# that already: gram knowledge (G, M) is additive, the encoder factors are
+# additive through their Gram U S^2 U^T, and the per-sample train-error
+# pool — which is concatenated, not summed — becomes additive as a
+# fixed-bin histogram.  These two hooks are the exchange boundary the
+# privacy tier plugs into: flatten to a list of additive leaves, aggregate
+# however (masked or not, any order), convert back once at the broker.
+# ---------------------------------------------------------------------------
+
+#: Train-error histogram wire format: counts over EXCHANGE_ERR_BINS bins on
+#: [0, EXCHANGE_ERR_CAP] (overflow clipped into the top bin), decoded back
+#: into a deterministic EXCHANGE_ERR_POOL-sample pool.  Data-independent so
+#: every site bins identically.
+EXCHANGE_ERR_BINS = 64
+EXCHANGE_ERR_CAP = 4.0
+EXCHANGE_ERR_POOL = 256
+
+
+def errors_to_histogram(errors) -> np.ndarray:
+    """Additive form of a train-error pool: fixed-bin counts (float64)."""
+    e = np.clip(np.asarray(errors, np.float64), 0.0,
+                EXCHANGE_ERR_CAP * (1 - 1e-9))
+    edges = np.linspace(0.0, EXCHANGE_ERR_CAP, EXCHANGE_ERR_BINS + 1)
+    return np.histogram(e, bins=edges)[0].astype(np.float64)
+
+
+def histogram_to_pool(counts) -> np.ndarray:
+    """Deterministic inverse-CDF resample of a (summed) error histogram
+    into a fixed-size pool — shaped like a train_errors leaf so threshold
+    rules (`anomaly.threshold`) consume it unchanged."""
+    counts = np.maximum(np.asarray(counts, np.float64), 0.0)
+    total = max(float(counts.sum()), 1e-9)
+    cdf = np.cumsum(counts) / total
+    qs = (np.arange(EXCHANGE_ERR_POOL, dtype=np.float64) + 0.5) \
+        / EXCHANGE_ERR_POOL
+    idx = np.clip(np.searchsorted(cdf, qs), 0, EXCHANGE_ERR_BINS - 1)
+    edges = np.linspace(0.0, EXCHANGE_ERR_CAP, EXCHANGE_ERR_BINS + 1)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    return centers[idx].astype(np.float32)
+
+
+def exchange_to_additive(config: daef.DAEFConfig, state: tuple) -> list:
+    """Flatten an exchange state triple into purely-additive numpy leaves:
+    ``[enc Gram, (G, M) per layer ..., error histogram]``.  Summing the
+    leaf lists of several sites and converting back with
+    `additive_to_exchange` equals merging the states (up to the lossy
+    error-pool histogram, which is the price of broker-blinding)."""
+    if config.method != "gram":
+        raise ValueError(
+            "exchange_to_additive: factor-form knowledge (method='svd') "
+            "does not merge by plain sum and cannot ride an additive wire "
+            "— use method='gram'"
+        )
+    enc, knowledge, errors = state
+    leaves = [np.asarray((enc.u * (enc.s * enc.s)[..., None, :]) @ enc.u.T)]
+    for k in knowledge:
+        if not isinstance(k, rolann.RolannStats):
+            raise ValueError(
+                "exchange_to_additive: expected gram RolannStats knowledge, "
+                f"got {type(k).__name__}"
+            )
+        leaves.append(np.asarray(k.g))
+        leaves.append(np.asarray(k.m))
+    leaves.append(errors_to_histogram(errors))
+    return leaves
+
+
+def additive_to_exchange(config: daef.DAEFConfig, leaves: list) -> tuple:
+    """Invert `exchange_to_additive` on an aggregated leaf list: eigh the
+    summed encoder Gram back to factors (full rank — already padded),
+    rebuild the per-layer stats, resample the error pool."""
+    n_layers = len(config.layer_sizes) - 2
+    if len(leaves) != 2 + 2 * n_layers:
+        raise ValueError(
+            f"additive_to_exchange: expected {2 + 2 * n_layers} leaves for "
+            f"{n_layers} decoder layers, got {len(leaves)}"
+        )
+    enc = dsvd.gram_to_factors(jnp.asarray(np.asarray(leaves[0], np.float32)))
+    knowledge = tuple(
+        rolann.RolannStats(
+            g=jnp.asarray(np.asarray(leaves[1 + 2 * i], np.float32)),
+            m=jnp.asarray(np.asarray(leaves[2 + 2 * i], np.float32)),
+        )
+        for i in range(n_layers)
+    )
+    return enc, knowledge, histogram_to_pool(leaves[-1])
 
 
 def _aggregate(items: list, use_gram: bool):

@@ -638,3 +638,37 @@ def merge_state_tree(
     enc_m, knw_m = fn(enc, knowledge)
     # The root state is replicated across the remaining slot axis; keep one.
     return jax.tree.map(lambda leaf: leaf[0], (enc_m, knw_m))
+
+
+def merge_wire_tree(wires: list) -> list:
+    """The butterfly reduction over secagg FIXED-POINT wires, on host.
+
+    Secure-aggregation wires (`repro.privacy.secagg`) are lists of uint64
+    leaves whose arithmetic is mod 2^64 — int64 has no device path without
+    x64 mode, so the tree strategy for masked exchanges runs the SAME
+    distance-doubling partner pairing as `_state_tree_fn`'s butterfly
+    (slot d pairs with d ^ 2^r each round) in numpy.  Because modular
+    addition is associative and commutative, the result is bit-identical
+    to a sequential fold — the pairing only matters so the session's
+    merge='tree' plans exercise the butterfly schedule end to end.
+
+    Non-power-of-two wire counts are padded with zero wires (the additive
+    identity — the wire-level analogue of `merge_state_tree`'s masked
+    slots).
+    """
+    if not wires:
+        raise ValueError("merge_wire_tree: empty wire list")
+    n = len(wires)
+    size = 1 << max(0, n - 1).bit_length() if n > 1 else 1
+    zeros = [np.zeros_like(np.asarray(leaf, np.uint64)) for leaf in wires[0]]
+    slots = [
+        [np.asarray(leaf, np.uint64) for leaf in w] for w in wires
+    ] + [zeros] * (size - n)
+    dist = 1
+    while dist < size:
+        slots = [
+            [a + b for a, b in zip(slots[k], slots[k ^ dist], strict=True)]
+            for k in range(size)
+        ]
+        dist *= 2
+    return slots[0]

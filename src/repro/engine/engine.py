@@ -124,6 +124,24 @@ class DAEFEngine:
                 f"config.method={config.method!r} — SVD factors have no "
                 "additive chunk form; use method='gram'"
             )
+        if plan.privacy is not None and plan.privacy.enabled:
+            if config.method != "gram":
+                raise PlanError(
+                    "plan.privacy hardens ADDITIVE (G, M) exchanges, but "
+                    f"config.method={config.method!r} — factor knowledge has "
+                    "neither a bounded-sensitivity DP release nor an additive "
+                    "secagg wire form; use method='gram'"
+                )
+            if plan.privacy.dp_enabled and (
+                config.act_hidden != "logsig" or config.act_last != "linear"
+            ):
+                raise PlanError(
+                    "plan.privacy DP sensitivity bounds are derived for "
+                    "act_hidden='logsig' + act_last='linear', got "
+                    f"({config.act_hidden!r}, {config.act_last!r}) — "
+                    "unbounded activations make the release sensitivity "
+                    "unbounded (privacy.dp.block_sensitivities)"
+                )
         self.config = config
         self.plan = plan
         self._model_version = 0
@@ -766,19 +784,32 @@ class DAEFEngine:
     # save / load
     # ------------------------------------------------------------------
 
-    def save(self, state: EngineState, path: str) -> str:
+    def save(self, state, path: str) -> str:
         """Persist a trained state (msgpack-framed numpy, via
-        train.checkpoint).  Returns the checkpoint directory."""
+        train.checkpoint) or a mid-federation ``FederationSession`` (model
+        + per-site ledger + privacy spend — see ``FederationSession.save``).
+        Returns the checkpoint directory."""
+        from repro.engine.session import FederationSession
         from repro.train import checkpoint
 
+        if isinstance(state, FederationSession):
+            return state.save(path)
         self._is_fleet(state, what="save")
         return checkpoint.save(path, state)
 
-    def load(self, path: str) -> EngineState:
-        """Restore a state saved by ``save`` under a structurally identical
-        config/plan; mesh plans re-place the fleet onto the mesh."""
+    def load(self, path: str):
+        """Restore whatever ``save`` wrote at ``path`` under a structurally
+        identical config/plan: a ``session.json`` in the directory means a
+        ``FederationSession`` (rebound to THIS engine), anything else a
+        model/fleet state; mesh plans re-place the fleet onto the mesh."""
+        import os
+
         from repro.train import checkpoint
 
+        if os.path.exists(os.path.join(path, "session.json")):
+            from repro.engine.session import FederationSession
+
+            return FederationSession.restore(self, path)
         try:
             state = checkpoint.restore(path, self._template())
         except ValueError as e:

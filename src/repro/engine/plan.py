@@ -59,14 +59,24 @@ the choice into configuration:
                   contribution, the next time it reports).  0 = only sites
                   that reported in the current round count.
 
-Every future scenario (multi-host fleets, caching, DP noise) is a new field
-here — not a sixth parallel module-level API.
+* ``privacy``    — the exchange-hardening tier (`repro.privacy.PrivacySpec`):
+                  per-site DP release of every exchanged statistics block
+                  (``epsilon``/``delta``/``clip``, budget-tracked by a
+                  per-site ledger) and/or pairwise-masked secure
+                  aggregation (``secagg=True``: the broker only ever sees
+                  the round aggregate).  ``None`` — and a constructed but
+                  disabled spec — leave every path bit-exact with today's
+                  behavior.  See docs/privacy.md.
+
+Every future scenario (multi-host fleets, caching) is a new field here —
+not a sixth parallel module-level API.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core import stats_backend as stats_backend_mod
+from repro.privacy.spec import PrivacySpec
 
 MODES = ("loop", "vmap", "mesh")
 MERGES = ("sequential", "pairwise", "tree")
@@ -94,6 +104,7 @@ class ExecutionPlan:
     chunk_samples: int | None = None
     federation: str = "sync"
     max_staleness: int = 0
+    privacy: PrivacySpec | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -182,6 +193,31 @@ class ExecutionPlan:
         if self.stats_backend is not None:
             # raises on unknown names (same contract as DAEFConfig)
             stats_backend_mod.resolve(self.stats_backend)
+        if self.privacy is not None:
+            if not isinstance(self.privacy, PrivacySpec):
+                raise PlanError(
+                    f"privacy must be a PrivacySpec (or None), got "
+                    f"{type(self.privacy).__name__}"
+                )
+            if (self.privacy.enabled and self.federation == "sync"
+                    and self.merge == "sequential"):
+                raise PlanError(
+                    "privacy hardening cannot run under the sync "
+                    "merge='sequential' protocol — it synchronizes sites "
+                    "layer by layer on raw statistics, so there is no "
+                    "site-local release boundary to harden; use "
+                    "merge='pairwise'/'tree' or federation='async'"
+                )
+            if self.privacy.secagg and self.async_federation \
+                    and self.max_staleness:
+                raise PlanError(
+                    f"max_staleness={self.max_staleness} with secagg=True "
+                    "is contradictory: masked aggregation hides individual "
+                    "site contributions from the broker, so stale sites "
+                    "cannot be excluded from the live model — set "
+                    "max_staleness=0 (full cumulative aggregate) or drop "
+                    "secagg"
+                )
 
     @property
     def tenant_sharded(self) -> bool:

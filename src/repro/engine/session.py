@@ -41,26 +41,42 @@ every round with ``max_staleness=0``, the async model matches the
 sequential broker merge at test_parity tolerances (tests/
 test_async_federation.py enforces this end to end).
 
-Messages are always the privacy-safe statistics (encoder factors +
-per-layer ROLANN knowledge) — never raw data.
+Messages are always the compact sufficient statistics (encoder factors +
+per-layer ROLANN knowledge) — never raw data.  That is compression, not
+privacy: an honest-but-curious broker can still learn about individual
+samples from the plain statistics (docs/privacy.md has the worked
+attack).  Actual hardening is the opt-in privacy tier,
+``ExecutionPlan(privacy=PrivacySpec(...))`` — per-site DP release with
+budget accounting and/or pairwise-masked secure aggregation.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import zlib
 from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import daef, dsvd, fleet, fleet_sharded
+from repro.core import daef, dsvd, fleet, fleet_sharded, rolann
 from repro.engine.plan import PlanError
+from repro.privacy.accounting import PrivacyLedger
 
 Array = jnp.ndarray
 
 # A site's exchange state: (encoder SvdFactors padded to rank m0, per-layer
 # ROLANN knowledge, host-side per-sample train-error pool).
 ExchangeState = tuple
+
+# Ledger key of the one cumulative masked aggregate under async secagg: the
+# broker never sees per-site states, so the ledger cannot key on site ids.
+SECAGG_AGGREGATE = "secagg:aggregate"
+
+_SESSION_META = "session.json"
+_SESSION_ARRAYS = "arrays"
 
 
 @dataclasses.dataclass
@@ -108,6 +124,8 @@ class FederationSession:
         self.rounds_run = 0
         self.clock = 0
         self._ledger: dict = {}
+        # site id -> PrivacyLedger (cumulative DP spend; survives reset()).
+        self._privacy_ledgers: dict = {}
 
     # ------------------------------------------------------------------
     # Rounds
@@ -148,7 +166,10 @@ class FederationSession:
                 "lockstep; use ExecutionPlan(federation='async') for "
                 "refresh-only rounds)"
             )
-        update = self._aggregate_round([p for _, p in named])
+        update = (
+            self._aggregate_round_private(named) if self._privacy is not None
+            else self._aggregate_round([p for _, p in named])
+        )
         self.model = (
             update if self.model is None
             else daef.merge_models(self.engine.config, self.model, update)
@@ -157,16 +178,39 @@ class FederationSession:
         self.engine._bump_version()
         return self.model
 
+    @staticmethod
+    def _is_pair_sequence(items: list) -> bool:
+        """Whether every element reads as an explicit ``(site, part)`` pair
+        (site ids are int or str — the same ids a mapping would carry)."""
+        return bool(items) and all(
+            isinstance(e, (tuple, list)) and len(e) == 2
+            and isinstance(e[0], (int, str)) and not isinstance(e[0], bool)
+            for e in items
+        )
+
     def _check_parts(self, parts) -> list[tuple]:
-        """Normalize parts to [(site, [m0, n] array), ...], validated."""
+        """Normalize parts to [(site, [m0, n] array), ...], validated.
+
+        Accepts a mapping (site -> partition), a sequence of explicit
+        ``(site, partition)`` pairs (the only spelling that can express a
+        site reporting twice in one round), or a bare sequence of
+        partitions (sites implicitly numbered 0..n-1).  A repeated site id
+        within one round FOLDS under async semantics (both blocks land in
+        the site's ledger) and raises under sync lockstep (a sync round has
+        no per-site ledger to fold into)."""
         if isinstance(parts, Mapping):
             named = [(site, jnp.asarray(p)) for site, p in parts.items()]
         elif isinstance(parts, Sequence) or hasattr(parts, "__iter__"):
-            named = [(i, jnp.asarray(p)) for i, p in enumerate(parts)]
+            items = list(parts)
+            if self._is_pair_sequence(items):
+                named = [(site, jnp.asarray(p)) for site, p in items]
+            else:
+                named = [(i, jnp.asarray(p)) for i, p in enumerate(items)]
         else:
             raise PlanError(
-                f"round: parts must be a sequence of partitions or a "
-                f"site -> partition mapping, got {type(parts).__name__}"
+                f"round: parts must be a sequence of partitions, a sequence "
+                f"of (site, partition) pairs, or a site -> partition "
+                f"mapping, got {type(parts).__name__}"
             )
         m0 = self.engine.config.layer_sizes[0]
         for site, p in named:
@@ -175,7 +219,122 @@ class FederationSession:
                     f"round: partition {site!r} must be [features={m0}, "
                     f"samples], got shape {tuple(p.shape)}"
                 )
+        sites = [s for s, _ in named]
+        if len(set(sites)) != len(sites):
+            dups = sorted({repr(s) for s in sites if sites.count(s) > 1})
+            if not self.engine.plan.async_federation:
+                raise PlanError(
+                    f"round: site(s) {', '.join(dups)} report twice in one "
+                    "lockstep round — sync rounds have no per-site ledger "
+                    "to fold repeats into; concatenate the partitions "
+                    "client-side or use federation='async' (repeats fold "
+                    "into the site's accumulated state)"
+                )
+            if self._privacy is not None and self._privacy.secagg:
+                raise PlanError(
+                    f"round: site(s) {', '.join(dups)} report twice in one "
+                    "secagg round — duplicated ids unbalance the pairwise "
+                    "masks (cancellation needs exactly one wire per "
+                    "participant); concatenate the partitions client-side"
+                )
         return named
+
+    # ------------------------------------------------------------------
+    # Privacy tier (plan.privacy — docs/privacy.md)
+    # ------------------------------------------------------------------
+
+    @property
+    def _privacy(self):
+        """The active PrivacySpec, or None when the tier is off.  A
+        constructed-but-disabled spec returns None too, so every disabled
+        path is bit-exact with the plain session by construction."""
+        spec = self.engine.plan.privacy
+        return spec if spec is not None and spec.enabled else None
+
+    def _ledger_for(self, site) -> PrivacyLedger:
+        led = self._privacy_ledgers.get(site)
+        if led is None:
+            spec = self.engine.plan.privacy
+            led = PrivacyLedger(
+                budget_epsilon=spec.budget_epsilon,
+                budget_delta=spec.budget_delta,
+                composition=spec.composition,
+            )
+            self._privacy_ledgers[site] = led
+        return led
+
+    def privacy_spent(self, site) -> tuple[float, float]:
+        """Cumulative ``(epsilon, delta)`` spent by ``site`` across every
+        round so far, under the spec's composition rule.  (0.0, 0.0) for a
+        site that never released."""
+        led = self._privacy_ledgers.get(site)
+        return (0.0, 0.0) if led is None else led.spent()
+
+    def _dp_key(self, site, occurrence: int = 0):
+        """Per-(site, round, occurrence) release key: fold the site's id,
+        the round tick and the within-round occurrence index into the
+        config seed, so no two releases EVER reuse noise (an async site
+        may legally report twice in one round) and reruns are
+        reproducible."""
+        cfg = self.engine.config
+        root = jax.random.PRNGKey(cfg.seed)
+        site_key = jax.random.fold_in(
+            root, zlib.crc32(repr(site).encode()) & 0x7FFFFFFF
+        )
+        tick = (self.clock if self.engine.plan.async_federation
+                else self.rounds_run)
+        return jax.random.fold_in(jax.random.fold_in(site_key, tick),
+                                  occurrence)
+
+    def _secagg_round(self, sites: list, states: list[ExchangeState]):
+        """Masked aggregation of one round: each site's exchange state goes
+        to the additive wire form, is fixed-point encoded, masked against
+        every other participant, and only the SUM is ever decoded — the
+        broker never sees an individual state (mask cancellation is exact
+        in uint64, so the aggregate is bit-identical to the unmasked sum)."""
+        from repro.core import federated
+        from repro.privacy import secagg
+
+        cfg, plan = self.engine.config, self.engine.plan
+        spec = self._privacy
+        salt = self.clock if plan.async_federation else self.rounds_run
+        secret = f"daef-secagg:{cfg.seed}"
+        wires = [
+            secagg.encode(federated.exchange_to_additive(cfg, st),
+                          spec.frac_bits)
+            for st in states
+        ]
+        masked = [
+            secagg.mask_wire(w, site, sites, secret, salt)
+            for site, w in zip(sites, wires, strict=True)
+        ]
+        if plan.merge == "tree":
+            agg = fleet_sharded.merge_wire_tree(masked)
+        else:
+            agg = secagg.aggregate(masked, plan.merge)
+        leaves = secagg.decode(agg, spec.frac_bits,
+                               dtypes=[np.float64] * len(agg))
+        enc, knw, errors = federated.additive_to_exchange(cfg, leaves)
+        return enc, knw, np.asarray(errors)
+
+    def _aggregate_round_private(self, named: list[tuple]) -> daef.DAEFModel:
+        """One sync lockstep round under the privacy tier: per-site release
+        (DP and/or masked wires), reduce, ONE weight re-solve from the
+        aggregated knowledge."""
+        cfg = self.engine.config
+        spec = self._privacy
+        states = self._local_states(named)
+        if spec.secagg:
+            enc, knw, errors = self._secagg_round([s for s, _ in named],
+                                                  states)
+        elif len(states) == 1:
+            enc, knw, errors = states[0]
+        else:
+            enc, knw, errors = self._reduce_states(states)
+        return daef._model_from_knowledge(
+            cfg, enc, knw, cfg.layer_keys(), cfg.lam_hidden, cfg.lam_last,
+            jnp.asarray(errors),
+        )
 
     # ------------------------------------------------------------------
     # Sync aggregation (lockstep)
@@ -231,34 +390,75 @@ class FederationSession:
 
     def _round_async(self, named: list[tuple]) -> daef.DAEFModel | None:
         self.clock += 1
+        spec = self._privacy
         if named:
-            for site, state in zip(
-                [s for s, _ in named],
-                self._local_states([p for _, p in named]),
-                strict=True,
-            ):
-                rec = self._ledger.get(site)
+            states = self._local_states(named)
+            if spec is not None and spec.secagg:
+                # The broker only ever sees the round's masked aggregate:
+                # ONE cumulative ledger entry, never per-site states (which
+                # is why plan validation rejects max_staleness > 0 here).
+                agg = self._secagg_round([s for s, _ in named], states)
+                rec = self._ledger.get(SECAGG_AGGREGATE)
                 if rec is None:
-                    self._ledger[site] = _SiteRecord(state, self.clock)
+                    self._ledger[SECAGG_AGGREGATE] = _SiteRecord(
+                        agg, self.clock
+                    )
                 else:
-                    rec.state = self._fold(rec.state, state)
+                    rec.state = self._fold(rec.state, agg)
                     rec.version = self.clock
                     rec.submits += 1
+            else:
+                for (site, _), state in zip(named, states, strict=True):
+                    rec = self._ledger.get(site)
+                    if rec is None:
+                        self._ledger[site] = _SiteRecord(state, self.clock)
+                    else:
+                        rec.state = self._fold(rec.state, state)
+                        rec.version = self.clock
+                        rec.submits += 1
         model = self._refresh()
         if model is not None:
             self.model = model
         self.rounds_run += 1
         return self.model
 
-    def _local_states(self, parts: list[Array]) -> list[ExchangeState]:
+    def _local_states(self, named: list[tuple]) -> list[ExchangeState]:
         """Fit the round's local models and publish their exchange states.
 
         Equal-width rounds batch into ONE vmapped fleet dispatch under
         vmap/mesh plans; ragged rounds (and loop plans, the parity
         baseline) fit per site.  All sites share the config's seed — the
         paper's shared stage-1 randomness that makes knowledge mergeable.
+
+        Under a DP spec every site's release goes through ``dp.fit_dp``
+        instead: budget check + ledger spend FIRST (an over-budget site
+        aborts the round before any noise draw), then the calibrated
+        Gaussian-mechanism release keyed per (site, round).
         """
         cfg, plan = self.engine.config, self.engine.plan
+        spec = self._privacy
+        m0 = cfg.layer_sizes[0]
+
+        def publish(m):
+            return (
+                dsvd.pad_rank(m.encoder_factors, m0),
+                m.layer_knowledge,
+                np.asarray(m.train_errors),
+            )
+
+        if spec is not None and spec.dp_enabled:
+            from repro.privacy import dp
+
+            states, seen = [], {}
+            for site, p in named:
+                occ = seen.get(site, 0)
+                seen[site] = occ + 1
+                self._ledger_for(site).spend(spec.epsilon, spec.delta)
+                model = dp.fit_dp(cfg, p, self._dp_key(site, occ), spec,
+                                  chunk_samples=plan.chunk_samples)
+                states.append(publish(model))
+            return states
+        parts = [p for _, p in named]
         widths = {p.shape[1] for p in parts}
         if plan.mode != "loop" and len(parts) > 1 and len(widths) == 1:
             fl = fleet._fit_fleet(cfg, jnp.stack(parts), seeds=None,
@@ -266,15 +466,7 @@ class FederationSession:
             models = [fleet.get_model(fl, i) for i in range(len(parts))]
         else:
             models = [daef.fit(cfg, p) for p in parts]
-        m0 = cfg.layer_sizes[0]
-        return [
-            (
-                dsvd.pad_rank(m.encoder_factors, m0),
-                m.layer_knowledge,
-                np.asarray(m.train_errors),
-            )
-            for m in models
-        ]
+        return [publish(m) for m in models]
 
     def _fold(self, acc: ExchangeState, new: ExchangeState) -> ExchangeState:
         """Fold a site's new block into its accumulated contribution —
@@ -352,6 +544,128 @@ class FederationSession:
         return federated.merge_exchange_states(cfg, states)
 
     # ------------------------------------------------------------------
+    # Persistence (a session survives an engine restart)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _site_meta(site) -> list:
+        if isinstance(site, bool) or not isinstance(site, (int, str)):
+            raise PlanError(
+                f"session save: site ids must be int or str to persist "
+                f"across restarts, got {type(site).__name__} ({site!r})"
+            )
+        return ["int", int(site)] if isinstance(site, int) else ["str", site]
+
+    @staticmethod
+    def _site_from_meta(meta: list):
+        kind, value = meta
+        return int(value) if kind == "int" else str(value)
+
+    def save(self, path: str) -> str:
+        """Persist the full session mid-federation: the live model, every
+        site's accumulated exchange state + version + submit count, the
+        round clock, and each site's privacy-ledger spend history.  Layout:
+        ``path/session.json`` (metadata) + ``path/arrays`` (a
+        train.checkpoint of the array tree).  Returns ``path``."""
+        from repro.train import checkpoint
+
+        sites = list(self._ledger.items())
+        meta = {
+            "clock": self.clock,
+            "rounds_run": self.rounds_run,
+            "has_model": self.model is not None,
+            "sites": [
+                {"id": self._site_meta(site), "version": rec.version,
+                 "submits": rec.submits}
+                for site, rec in sites
+            ],
+            "privacy": [
+                [self._site_meta(site), led.spends()]
+                for site, led in self._privacy_ledgers.items()
+            ],
+        }
+        tree = {
+            "model": self.model if self.model is not None else (),
+            "sites": [rec.state for _, rec in sites],
+        }
+        os.makedirs(path, exist_ok=True)
+        checkpoint.save(os.path.join(path, _SESSION_ARRAYS), tree)
+        tmp = os.path.join(path, _SESSION_META + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=1)
+        os.replace(tmp, os.path.join(path, _SESSION_META))
+        return path
+
+    @classmethod
+    def restore(cls, engine, path: str) -> "FederationSession":
+        """Rebuild a session saved by ``save`` under a structurally
+        identical engine (same config layer sizes / method, same plan
+        semantics).  ``DAEFEngine.load`` dispatches here when the
+        checkpoint directory carries ``session.json``."""
+        from repro.train import checkpoint
+
+        with open(os.path.join(path, _SESSION_META)) as f:
+            meta = json.load(f)
+        cfg = engine.config
+        n_layers = len(cfg.layer_sizes)
+
+        def z():
+            return np.zeros((0,), np.float32)
+
+        if cfg.method == "gram":
+            know = rolann.RolannStats(g=z(), m=z())
+        else:
+            know = rolann.RolannFactors(u=z(), s=z(), m=z())
+        model_t = daef.DAEFModel(
+            weights=tuple(z() for _ in range(n_layers - 1)),
+            biases=tuple(z() for _ in range(n_layers - 2)),
+            encoder_factors=dsvd.SvdFactors(u=z(), s=z()),
+            layer_knowledge=tuple(know for _ in range(n_layers - 2)),
+            train_errors=z(),
+        )
+        state_t = (
+            dsvd.SvdFactors(u=z(), s=z()),
+            tuple(know for _ in range(n_layers - 2)),
+            z(),
+        )
+        template = {
+            "model": model_t if meta["has_model"] else (),
+            "sites": [state_t for _ in meta["sites"]],
+        }
+        try:
+            tree = checkpoint.restore(
+                os.path.join(path, _SESSION_ARRAYS), template
+            )
+        except ValueError as e:
+            raise PlanError(
+                f"session restore: checkpoint at {path!r} does not match "
+                f"this engine's config ({e}); restore with an engine "
+                "structurally identical to the one that saved it"
+            ) from e
+        session = cls(engine)
+        session.clock = int(meta["clock"])
+        session.rounds_run = int(meta["rounds_run"])
+        if meta["has_model"]:
+            session.model = tree["model"]
+        for site_meta, state in zip(meta["sites"], tree["sites"],
+                                    strict=True):
+            session._ledger[cls._site_from_meta(site_meta["id"])] = (
+                _SiteRecord(tuple(state), int(site_meta["version"]),
+                            int(site_meta["submits"]))
+            )
+        spec = engine.plan.privacy
+        for site_meta, spends in meta.get("privacy", []):
+            session._privacy_ledgers[cls._site_from_meta(site_meta)] = (
+                PrivacyLedger.from_spends(
+                    [tuple(s) for s in spends],
+                    budget_epsilon=spec.budget_epsilon if spec else None,
+                    budget_delta=spec.budget_delta if spec else None,
+                    composition=spec.composition if spec else "advanced",
+                )
+            )
+        return session
+
+    # ------------------------------------------------------------------
     # Site lifecycle / introspection
     # ------------------------------------------------------------------
 
@@ -371,7 +685,11 @@ class FederationSession:
         return self.staleness(site) <= self.engine.plan.max_staleness
 
     def reset(self) -> None:
-        """Forget the accumulated model, ledger and clock (fresh federation)."""
+        """Forget the accumulated model, ledger and clock (fresh federation).
+
+        Privacy ledgers are deliberately KEPT: (epsilon, delta) spend is a
+        property of the sites' data, not of the session state — resetting
+        the model does not un-release past statistics."""
         self.model = None
         self.rounds_run = 0
         self.clock = 0

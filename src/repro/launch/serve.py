@@ -193,15 +193,28 @@ def run_async(args) -> None:
     m0 = splits[0][0].shape[0]
     cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9,
                           lam_last=0.9)
+    privacy = _privacy_spec(args)
+    max_staleness = args.max_staleness
+    if privacy is not None and privacy.secagg and max_staleness:
+        # Masked aggregation hides per-site states from the broker, so
+        # stale sites cannot be excluded — the plan would reject the combo.
+        print("secagg: forcing max_staleness=0 (masked aggregation cannot "
+              "exclude stale sites)")
+        max_staleness = 0
+    args.max_staleness = max_staleness
     try:
         plan = ExecutionPlan(federation="async", merge="pairwise",
-                             max_staleness=args.max_staleness)
+                             max_staleness=max_staleness,
+                             privacy=privacy)
         engine = DAEFEngine(cfg, plan)
     except PlanError as e:
         raise SystemExit(f"error: {e}") from e
     session = engine.session()
     print(f"async federation: {s_count} sites, straggle fraction "
-          f"{args.straggle}, max_staleness {args.max_staleness}")
+          f"{args.straggle}, max_staleness {max_staleness}")
+    if privacy is not None:
+        print(f"privacy: dp epsilon={privacy.epsilon} delta={privacy.delta} "
+              f"clip={privacy.clip}, secagg={privacy.secagg}")
 
     # Pre-slice each site's train pool into one block per round.
     rounds = args.async_rounds
@@ -248,9 +261,79 @@ def run_async(args) -> None:
     print(f"held-out reconstruction MSE across {s_count} sites: "
           f"mean {np.mean(mses):.4f} (min {min(mses):.4f}, "
           f"max {max(mses):.4f})")
+    if privacy is not None and privacy.dp_enabled:
+        eps_spent = [session.privacy_spent(t)[0] for t in range(s_count)]
+        print(f"privacy: cumulative epsilon spent per site — "
+              f"min {min(eps_spent):.2f}, max {max(eps_spent):.2f}")
     assert bool(jnp.isfinite(session.model.weights[-1]).all()), \
         "non-finite model"
     print("async federation OK")
+
+
+def _privacy_spec(args):
+    """Build a PrivacySpec from the --dp-*/--secagg flags, or None when the
+    privacy tier is off (plain exchanges, bit-exact with the old paths)."""
+    if args.dp_epsilon is None and not args.secagg:
+        return None
+    from repro.privacy import PrivacySpec
+
+    return PrivacySpec(
+        epsilon=args.dp_epsilon,
+        delta=args.dp_delta,
+        clip=args.dp_clip,
+        secagg=args.secagg,
+    )
+
+
+def run_privacy_smoke(args) -> None:
+    """CI smoke of the privacy tier end to end: a DP-calibrated federated
+    fit at epsilon=8 and one secagg-masked round checked against the
+    unmasked merge (docs/privacy.md)."""
+    from repro.core import daef
+    from repro.engine import DAEFEngine, ExecutionPlan
+    from repro.privacy import PrivacySpec
+
+    ds = synthetic.make_dataset("cardio", seed=0, scale=args.scale)
+    split = ds.train_test_split(fold=0)
+    x_train, x_test = split[0], split[1]
+    m0 = x_train.shape[0]
+    half = x_train.shape[1] // 2
+    parts = {"a": x_train[:, :half].astype(np.float32),
+             "b": x_train[:, half:].astype(np.float32)}
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 4, 8, m0), lam_hidden=0.9,
+                          lam_last=0.9)
+
+    # 1. DP release at epsilon=8: every exchanged block noised, finite model.
+    t0 = time.perf_counter()
+    engine = DAEFEngine(cfg, ExecutionPlan(
+        federation="async", merge="pairwise", privacy=PrivacySpec(epsilon=8.0)
+    ))
+    session = engine.session()
+    model = session.round(parts)
+    jax.block_until_ready(model.weights[-1])
+    assert bool(jnp.isfinite(model.weights[-1]).all()), "non-finite DP model"
+    mse = float(jnp.mean(daef.reconstruction_error(
+        cfg, model, jnp.asarray(x_test.astype(np.float32))
+    )))
+    eps, delta = session.privacy_spent("a")
+    print(f"privacy smoke: DP fit at epsilon=8 over {len(parts)} sites "
+          f"({time.perf_counter() - t0:.2f}s incl. JIT) — held-out MSE "
+          f"{mse:.4f}, per-site spend ({eps:.1f}, {delta:.1e})")
+
+    # 2. One secagg round: masked aggregate must match the unmasked merge.
+    t0 = time.perf_counter()
+    masked = DAEFEngine(cfg, ExecutionPlan(
+        federation="async", merge="pairwise", privacy=PrivacySpec(secagg=True)
+    )).session().round(parts)
+    plain = DAEFEngine(cfg, ExecutionPlan(
+        federation="async", merge="pairwise"
+    )).session().round(parts)
+    for wm, wp in zip(masked.weights, plain.weights):
+        np.testing.assert_allclose(np.asarray(wm), np.asarray(wp),
+                                   atol=5e-4, rtol=1e-3)
+    print(f"privacy smoke: secagg round matches unmasked merge "
+          f"({time.perf_counter() - t0:.2f}s)")
+    print("privacy smoke OK")
 
 
 def main() -> None:
@@ -305,6 +388,23 @@ def main() -> None:
     ap.add_argument("--max-staleness", type=int, default=1,
                     help="async mode: refresh rounds a site may lag before "
                          "it is excluded from the live global model")
+    ap.add_argument("--dp-epsilon", type=float, default=None,
+                    help="async mode: release every exchanged statistics "
+                         "block under the Gaussian mechanism at this "
+                         "per-round epsilon (default: no DP)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="async mode: DP delta for --dp-epsilon")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="async mode: per-sample L2 clip bound for the DP "
+                         "release")
+    ap.add_argument("--secagg", action="store_true",
+                    help="async mode: pairwise-masked secure aggregation — "
+                         "the broker only ever sees the round aggregate "
+                         "(forces --max-staleness 0 semantics)")
+    ap.add_argument("--privacy", action="store_true",
+                    help="run the privacy-tier smoke instead of an LM/fleet: "
+                         "a DP fit at epsilon=8 plus one secagg round "
+                         "checked against the unmasked merge")
     args = ap.parse_args()
 
     # NOTE: several flags use 0 as their "mode/feature off" sentinel — the
@@ -335,6 +435,19 @@ def main() -> None:
                  f"got {args.async_rounds}")
     if args.async_rounds and args.fleet:
         ap.error("--async-rounds and --fleet are separate modes; pick one")
+    if args.dp_epsilon is not None and args.dp_epsilon <= 0:
+        ap.error(f"--dp-epsilon must be > 0, got {args.dp_epsilon}")
+    if (args.dp_epsilon is not None or args.secagg) and not (
+        args.async_rounds or args.privacy
+    ):
+        ap.error("--dp-epsilon/--secagg apply to --async-rounds federation "
+                 "(or the --privacy smoke)")
+    if args.privacy and (args.fleet or args.async_rounds):
+        ap.error("--privacy is a standalone smoke mode; drop --fleet/"
+                 "--async-rounds")
+    if args.privacy:
+        run_privacy_smoke(args)
+        return
     if args.async_rounds:
         if args.sites < 1:
             ap.error(f"--sites must be >= 1, got {args.sites}")

@@ -1,0 +1,24 @@
+"""Privacy tier for the federated exchange (docs/privacy.md).
+
+Selected via ``ExecutionPlan(privacy=PrivacySpec(...))``:
+
+* `PrivacySpec`     — declarative spec (DP epsilon/delta/clip, budgets,
+                      secure aggregation, fixed-point precision);
+* `dp.fit_dp`       — Gaussian-mechanism release of every exchanged
+                      statistics block (the private `daef.fit`);
+* `PrivacyLedger`   — per-site cumulative (epsilon, delta) accounting
+                      with budget refusal (`PrivacyBudgetExceeded`);
+* `secagg`          — pairwise-masked aggregation: the broker sees only
+                      the round aggregate, bit-exactly;
+* `threat`          — the honest-but-curious adversary model and the
+                      reconstruction demo that motivates the tier.
+"""
+from repro.privacy.accounting import PrivacyBudgetExceeded, PrivacyLedger
+from repro.privacy.spec import PrivacyError, PrivacySpec
+
+__all__ = [
+    "PrivacyBudgetExceeded",
+    "PrivacyError",
+    "PrivacyLedger",
+    "PrivacySpec",
+]

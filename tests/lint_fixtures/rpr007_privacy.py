@@ -1,0 +1,29 @@
+# repro-lint: privacy
+"""RPR007 fixture: fixed PRNG keys and host randomness in privacy code."""
+import random
+
+import jax
+
+
+def bad_fixed_key():
+    return jax.random.PRNGKey(0)                             # line 9: RPR007
+
+
+def bad_fixed_key_alias():
+    from jax import random as jrandom
+
+    return jrandom.PRNGKey(42)                               # line 15: RPR007
+
+
+def bad_stdlib_random():
+    return random.random() + random.gauss(0.0, 1.0)          # line 19: RPR007 x2
+
+
+def ok_derived_key(seed, site, tick):
+    # a key derived from configuration and folded per release is the idiom
+    key = jax.random.PRNGKey(seed)
+    return jax.random.fold_in(jax.random.fold_in(key, site), tick)
+
+
+def ok_disable_escape():
+    return jax.random.PRNGKey(7)  # repro-lint: disable=RPR007

@@ -1,0 +1,651 @@
+"""Privacy tier: DP-calibrated releases, accounting, secure aggregation.
+
+The acceptance bar for ``ExecutionPlan(privacy=PrivacySpec(...))``:
+
+* a constructed-but-disabled spec (and ``privacy=None``) is BIT-EXACT with
+  the plain session on every mode x federation combination;
+* secagg-masked merges are bit-exact with the unmasked aggregate for every
+  merge strategy (mask cancellation happens in uint64, so it is exact, not
+  approximate);
+* the DP release's empirical noise scale matches the analytic sigma of the
+  Gaussian mechanism (statistical calibration, not just "noise happened");
+* the per-site ledger refuses over-budget releases BEFORE any noise draw;
+* a mid-session save/load round-trips the site ledger, versions and the
+  privacy spend history.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import daef, dsvd, federated, fleet_sharded
+from repro.engine import DAEFEngine, ExecutionPlan, PlanError
+from repro.privacy import (PrivacyBudgetExceeded, PrivacyError, PrivacyLedger,
+                           PrivacySpec)
+from repro.privacy import accounting, dp, secagg, threat
+
+M0, LATENT = 7, 3
+LAYERS = (M0, LATENT, 5, M0)
+MODES = ("loop", "vmap", "mesh")
+PARITY = dict(atol=5e-4, rtol=1e-3)
+
+
+def _cfg(**kw) -> daef.DAEFConfig:
+    base = dict(layer_sizes=LAYERS, lam_hidden=0.7, lam_last=0.9,
+                method="gram")
+    base.update(kw)
+    return daef.DAEFConfig(**base)
+
+
+def _parts(n_sites=4, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    mix = rng.normal(size=(M0, LATENT))
+    return [
+        (mix @ rng.normal(size=(LATENT, n)) * 0.4
+         + 0.05 * rng.normal(size=(M0, n))).astype(np.float32)
+        for _ in range(n_sites)
+    ]
+
+
+def _weights(model):
+    return [np.asarray(w) for w in model.weights]
+
+
+def _factors_gram(f):
+    u, s = np.asarray(f.u), np.asarray(f.s)
+    return (u * s**2) @ u.T
+
+
+# ---------------------------------------------------------------------------
+# PrivacySpec / plan validation
+# ---------------------------------------------------------------------------
+
+class TestSpec:
+    def test_disabled_by_default(self):
+        spec = PrivacySpec()
+        assert not spec.dp_enabled and not spec.secagg and not spec.enabled
+
+    @pytest.mark.parametrize("kw", [
+        dict(epsilon=0.0), dict(epsilon=-1.0), dict(delta=0.0),
+        dict(delta=1.0), dict(clip=0.0), dict(composition="nope"),
+        dict(frac_bits=0), dict(frac_bits=41),
+        dict(budget_epsilon=4.0),            # budget without epsilon
+        dict(epsilon=1.0, budget_epsilon=0.0),
+    ])
+    def test_bad_spec_raises(self, kw):
+        with pytest.raises(PrivacyError):
+            PrivacySpec(**kw)
+
+    def test_plan_rejects_non_spec(self):
+        with pytest.raises(PlanError, match="PrivacySpec"):
+            ExecutionPlan(privacy={"epsilon": 1.0})
+
+    def test_plan_rejects_sync_sequential_privacy(self):
+        with pytest.raises(PlanError, match="sequential"):
+            ExecutionPlan(merge="sequential", privacy=PrivacySpec(secagg=True))
+        # disabled spec: no release boundary needed, plan is fine
+        ExecutionPlan(merge="sequential", privacy=PrivacySpec())
+
+    def test_plan_rejects_secagg_with_staleness(self):
+        with pytest.raises(PlanError, match="max_staleness"):
+            ExecutionPlan(federation="async", merge="pairwise",
+                          max_staleness=1, privacy=PrivacySpec(secagg=True))
+
+    def test_engine_rejects_svd_method(self):
+        with pytest.raises(PlanError, match="gram"):
+            DAEFEngine(_cfg(method="svd"),
+                       ExecutionPlan(merge="pairwise",
+                                     privacy=PrivacySpec(secagg=True)))
+
+    def test_engine_rejects_unbounded_activations(self):
+        with pytest.raises(PlanError, match="logsig"):
+            DAEFEngine(_cfg(act_hidden="relu"),
+                       ExecutionPlan(merge="pairwise",
+                                     privacy=PrivacySpec(epsilon=1.0)))
+
+
+# ---------------------------------------------------------------------------
+# Gaussian mechanism calibration
+# ---------------------------------------------------------------------------
+
+class TestCalibration:
+    def test_sigma_monotone_in_epsilon(self):
+        sigmas = [dp.calibrate_sigma(e, 1e-5)
+                  for e in (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)]
+        assert all(a > b for a, b in zip(sigmas, sigmas[1:]))
+
+    def test_sigma_solves_the_mechanism_equation(self):
+        for eps, delta in ((0.5, 1e-5), (1.0, 1e-5), (8.0, 1e-6)):
+            sigma = dp.calibrate_sigma(eps, delta)
+            achieved = dp._gaussian_delta(sigma, eps)
+            assert achieved <= delta * (1 + 1e-6)
+            # and it is tight: a slightly smaller sigma violates delta
+            assert dp._gaussian_delta(sigma * 0.99, eps) > delta
+
+    def test_known_value(self):
+        # Balle & Wang (2018): sigma(eps=1, delta=1e-5) ~ 3.73 for Delta=1.
+        assert dp.calibrate_sigma(1.0, 1e-5) == pytest.approx(3.7306, abs=5e-3)
+
+    def test_large_epsilon_does_not_overflow(self):
+        # exp(epsilon) overflows past ~709 — the log-space evaluation must
+        # keep huge (but legal) budgets finite, tiny, and still monotone.
+        big = dp.calibrate_sigma(1000.0, 1e-5)
+        assert 0.0 < big < dp.calibrate_sigma(8.0, 1e-5)
+        assert dp._gaussian_delta(big, 1000.0) <= 1e-5 * (1 + 1e-6)
+
+    def test_empirical_noise_scale_matches_sigma(self):
+        # Statistical calibration: the released block's noise must have the
+        # analytic standard deviation, not just "some" noise.
+        sigma = 2.5
+        key = jax.random.PRNGKey(0)
+        draws = dp._sym_noise(key, (40, 40), sigma, jnp.float32)
+        tri = np.asarray(draws)[np.triu_indices(40)]
+        # 820 iid samples: std_err of the std estimate ~ sigma/sqrt(2*819)
+        assert np.std(tri) == pytest.approx(sigma, rel=0.1)
+        # symmetric by construction
+        np.testing.assert_array_equal(np.asarray(draws), np.asarray(draws).T)
+
+    def test_fit_dp_noise_scales_with_epsilon(self):
+        cfg = _cfg()
+        x = _parts(1, 200)[0]
+        key = jax.random.PRNGKey(3)
+        ref = daef.fit(cfg, jnp.asarray(dp.clip_columns(x, 1.0)))
+        g_ref = _factors_gram(ref.encoder_factors)
+
+        def gram_err(eps):
+            m = dp.fit_dp(cfg, x, key, PrivacySpec(epsilon=eps))
+            return float(np.linalg.norm(
+                _factors_gram(m.encoder_factors) - g_ref
+            ))
+
+        errs = [gram_err(e) for e in (0.5, 2.0, 8.0)]
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_fit_dp_reproducible_per_key(self):
+        cfg = _cfg()
+        x = _parts(1)[0]
+        k = jax.random.PRNGKey(5)
+        a = dp.fit_dp(cfg, x, k, PrivacySpec(epsilon=4.0))
+        b = dp.fit_dp(cfg, x, k, PrivacySpec(epsilon=4.0))
+        for wa, wb in zip(a.weights, b.weights):
+            np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+        c = dp.fit_dp(cfg, x, jax.random.PRNGKey(6), PrivacySpec(epsilon=4.0))
+        assert any(
+            not np.array_equal(np.asarray(wa), np.asarray(wc))
+            for wa, wc in zip(a.weights, c.weights)
+        )
+
+    def test_clip_columns_bounds_norms(self):
+        x = np.random.default_rng(0).normal(size=(M0, 30)) * 10
+        clipped = dp.clip_columns(x, 1.0)
+        assert float(np.linalg.norm(clipped, axis=0).max()) <= 1.0 + 1e-6
+        small = np.full((M0, 3), 0.01)
+        np.testing.assert_allclose(dp.clip_columns(small, 1.0), small)
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+class TestLedger:
+    def test_basic_composition_sums(self):
+        led = PrivacyLedger(composition="basic")
+        for _ in range(3):
+            led.spend(1.0, 1e-6)
+        eps, delta = led.spent()
+        assert eps == pytest.approx(3.0)
+        assert delta == pytest.approx(3e-6)
+
+    def test_advanced_beats_basic_for_many_small_releases(self):
+        led = PrivacyLedger(composition="advanced")
+        for _ in range(100):
+            led.spend(0.1, 1e-7)
+        eps, _ = led.spent()
+        assert eps < 100 * 0.1  # sublinear in the round count
+
+    def test_budget_refusal_is_preflight(self):
+        led = PrivacyLedger(budget_epsilon=2.5, budget_delta=1e-4,
+                            composition="basic")
+        led.spend(1.0, 1e-6)
+        led.spend(1.0, 1e-6)
+        with pytest.raises(PrivacyBudgetExceeded, match="budget"):
+            led.check(1.0, 1e-6)
+        # the refused release was NOT recorded
+        assert led.releases == 2
+        assert led.spent()[0] == pytest.approx(2.0)
+
+    def test_spends_roundtrip(self):
+        led = PrivacyLedger(budget_epsilon=10.0)
+        led.spend(1.0, 1e-6)
+        led.spend(2.0, 1e-6)
+        clone = PrivacyLedger.from_spends(led.spends(), budget_epsilon=10.0)
+        assert clone.spent() == led.spent()
+        assert clone.releases == 2
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation primitives
+# ---------------------------------------------------------------------------
+
+class TestSecagg:
+    def _leaves(self, seed=0, n=3):
+        rng = np.random.default_rng(seed)
+        return [rng.normal(size=(4, 4)).astype(np.float64) for _ in range(n)]
+
+    def test_codec_roundtrip_on_grid(self):
+        # values on the 2^-frac_bits grid decode exactly
+        q = 2.0 ** -20
+        leaves = [np.array([[1.5, -2.25], [q * 7, 0.0]])]
+        wire = secagg.encode(leaves, 20)
+        out = secagg.decode(wire, 20, dtypes=[np.float64])
+        np.testing.assert_array_equal(out[0], leaves[0])
+
+    def test_codec_rejects_overflow_and_nonfinite(self):
+        with pytest.raises(secagg.SecAggError):
+            secagg.encode([np.array([2.0 ** 45])], 20)
+        with pytest.raises(secagg.SecAggError):
+            secagg.encode([np.array([np.nan])], 20)
+
+    @pytest.mark.parametrize("strategy", ["sequential", "pairwise", "tree"])
+    @pytest.mark.parametrize("n_sites", [2, 3, 5, 8])
+    def test_mask_cancellation_bit_exact(self, strategy, n_sites):
+        sites = [f"site{i}" for i in range(n_sites)]
+        all_leaves = [self._leaves(seed=i) for i in range(n_sites)]
+        wires = [secagg.encode(lv, 20) for lv in all_leaves]
+        plain = wires[0]
+        for w in wires[1:]:
+            plain = secagg.add_wires(plain, w)
+        masked = [
+            secagg.mask_wire(w, s, sites, "secret", 7)
+            for s, w in zip(sites, wires)
+        ]
+        agg = secagg.aggregate(masked, strategy)
+        for a, p in zip(agg, plain):
+            np.testing.assert_array_equal(a, p)  # bit-exact, not allclose
+
+    def test_merge_wire_tree_matches_sequential(self):
+        for n in (2, 3, 5, 8):
+            wires = [secagg.encode(self._leaves(seed=i), 20)
+                     for i in range(n)]
+            seq = wires[0]
+            for w in wires[1:]:
+                seq = secagg.add_wires(seq, w)
+            tree = fleet_sharded.merge_wire_tree(wires)
+            for a, b in zip(tree, seq):
+                np.testing.assert_array_equal(a, b)
+
+    def test_dropout_seed_reveal_recovery(self):
+        sites = ["a", "b", "c", "d"]
+        wires = [secagg.encode(self._leaves(seed=i), 20) for i in range(4)]
+        masked = [secagg.mask_wire(w, s, sites, "secret", 3)
+                  for s, w in zip(sites, wires)]
+        # "c" drops out after masking: sum the surviving three, then remove
+        # the dangling masks via seed reveal.
+        agg = masked[0]
+        for w in (masked[1], masked[3]):
+            agg = secagg.add_wires(agg, w)
+        fixed = secagg.unmask_dropout(agg, ["c"], ["a", "b", "d"],
+                                      "secret", 3)
+        want = wires[0]
+        for w in (wires[1], wires[3]):
+            want = secagg.add_wires(want, w)
+        for a, b in zip(fixed, want):
+            np.testing.assert_array_equal(a, b)
+
+    def test_broker_view_is_masked(self):
+        # an individual masked wire differs from the plain wire everywhere
+        sites = ["a", "b"]
+        w = secagg.encode(self._leaves(), 20)
+        m = secagg.mask_wire(w, "a", sites, "secret", 0)
+        assert all(
+            not np.array_equal(mw, pw) for mw, pw in zip(m, w)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Additive exchange wire form
+# ---------------------------------------------------------------------------
+
+class TestAdditiveExchange:
+    def test_roundtrip_single_state(self):
+        cfg = _cfg()
+        m = daef.fit(cfg, jnp.asarray(_parts(1)[0]))
+        state = (dsvd.pad_rank(m.encoder_factors, M0), m.layer_knowledge,
+                 np.asarray(m.train_errors))
+        leaves = federated.exchange_to_additive(cfg, state)
+        enc, knw, errors = federated.additive_to_exchange(cfg, leaves)
+        np.testing.assert_allclose(
+            _factors_gram(enc), _factors_gram(state[0]),
+            atol=1e-4, rtol=1e-4,
+        )
+        for ka, kb in zip(knw, state[1]):
+            np.testing.assert_allclose(np.asarray(ka.g), np.asarray(kb.g),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(ka.m), np.asarray(kb.m),
+                                       atol=1e-5, rtol=1e-5)
+        assert errors.shape == (federated.EXCHANGE_ERR_POOL,)
+        # the resampled pool preserves the error distribution's location
+        assert float(np.median(errors)) == pytest.approx(
+            float(np.median(state[2])), abs=federated.EXCHANGE_ERR_CAP / 32
+        )
+
+    def test_histogram_is_additive(self):
+        e1 = np.abs(np.random.default_rng(0).normal(size=50)).astype(
+            np.float32)
+        e2 = np.abs(np.random.default_rng(1).normal(size=70)).astype(
+            np.float32)
+        h = federated.errors_to_histogram(np.concatenate([e1, e2]))
+        np.testing.assert_allclose(
+            h,
+            federated.errors_to_histogram(e1)
+            + federated.errors_to_histogram(e2),
+        )
+
+    def test_requires_gram_method(self):
+        cfg = _cfg(method="svd")
+        m = daef.fit(cfg, jnp.asarray(_parts(1)[0]))
+        state = (dsvd.pad_rank(m.encoder_factors, M0), m.layer_knowledge,
+                 np.asarray(m.train_errors))
+        with pytest.raises(ValueError, match="gram"):
+            federated.exchange_to_additive(cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# Session wiring: disabled-spec parity, secagg parity, DP rounds
+# ---------------------------------------------------------------------------
+
+class TestSessionParity:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("federation", ["sync", "async"])
+    def test_disabled_spec_bit_exact(self, mode, federation):
+        cfg = _cfg()
+        parts = _parts()
+        kw = dict(mode=mode, federation=federation, merge="pairwise")
+        plain = DAEFEngine(cfg, ExecutionPlan(**kw)).session().round(parts)
+        spec = DAEFEngine(cfg, ExecutionPlan(privacy=PrivacySpec(), **kw)
+                          ).session().round(parts)
+        for a, b in zip(_weights(plain), _weights(spec)):
+            np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("federation,merge", [
+        ("sync", "pairwise"), ("sync", "tree"),
+        ("async", "sequential"), ("async", "pairwise"), ("async", "tree"),
+    ])
+    def test_secagg_matches_unmasked_every_strategy(self, federation, merge):
+        cfg = _cfg()
+        parts = _parts()
+        kw = dict(federation=federation, merge=merge)
+        plain = DAEFEngine(cfg, ExecutionPlan(**kw)).session().round(parts)
+        masked = DAEFEngine(
+            cfg, ExecutionPlan(privacy=PrivacySpec(secagg=True), **kw)
+        ).session().round(parts)
+        for a, b in zip(_weights(plain), _weights(masked)):
+            np.testing.assert_allclose(a, b, **PARITY)
+
+    def test_secagg_multi_round_sync(self):
+        cfg = _cfg()
+        kw = dict(merge="pairwise")
+        p1, p2 = _parts(seed=0), _parts(seed=1)
+        s_plain = DAEFEngine(cfg, ExecutionPlan(**kw)).session()
+        s_mask = DAEFEngine(
+            cfg, ExecutionPlan(privacy=PrivacySpec(secagg=True), **kw)
+        ).session()
+        s_plain.round(p1)
+        s_mask.round(p1)
+        a, b = s_plain.round(p2), s_mask.round(p2)
+        for wa, wb in zip(_weights(a), _weights(b)):
+            np.testing.assert_allclose(wa, wb, **PARITY)
+
+    def test_async_secagg_single_aggregate_ledger(self):
+        from repro.engine.session import SECAGG_AGGREGATE
+
+        cfg = _cfg()
+        s = DAEFEngine(cfg, ExecutionPlan(
+            federation="async", merge="pairwise",
+            privacy=PrivacySpec(secagg=True),
+        )).session()
+        s.round({"a": _parts()[0], "b": _parts()[1]})
+        s.round({"a": _parts()[2]})
+        # the broker ledger never holds per-site states
+        assert set(s.sites) == {SECAGG_AGGREGATE}
+        assert s._ledger[SECAGG_AGGREGATE].submits == 2
+
+
+class TestSessionDP:
+    def test_dp_round_spends_and_differs(self):
+        cfg = _cfg()
+        parts = _parts()
+        s = DAEFEngine(cfg, ExecutionPlan(
+            merge="pairwise", privacy=PrivacySpec(epsilon=8.0),
+        )).session()
+        model = s.round(parts)
+        assert all(np.isfinite(w).all() for w in _weights(model))
+        for site in range(len(parts)):
+            eps, delta = s.privacy_spent(site)
+            assert eps == pytest.approx(8.0)
+            assert delta == pytest.approx(1e-5)
+        plain = DAEFEngine(cfg, ExecutionPlan(merge="pairwise")
+                           ).session().round(parts)
+        assert any(
+            not np.allclose(a, b)
+            for a, b in zip(_weights(model), _weights(plain))
+        )
+
+    def test_budget_refusal_aborts_round(self):
+        cfg = _cfg()
+        parts = _parts(2)
+        s = DAEFEngine(cfg, ExecutionPlan(
+            merge="pairwise",
+            privacy=PrivacySpec(epsilon=4.0, budget_epsilon=9.0,
+                                composition="basic"),
+        )).session()
+        s.round(parts)
+        s.round(parts)
+        with pytest.raises(PrivacyBudgetExceeded):
+            s.round(parts)
+        # spend is still the two successful rounds
+        assert s.privacy_spent(0)[0] == pytest.approx(8.0)
+
+    def test_dp_keys_never_repeat(self):
+        cfg = _cfg()
+        s = DAEFEngine(cfg, ExecutionPlan(
+            federation="async", merge="pairwise",
+            privacy=PrivacySpec(epsilon=8.0),
+        )).session()
+        keys = set()
+        for clock in (1, 2):
+            s.clock = clock
+            for site in ("a", "b"):
+                for occ in (0, 1):
+                    keys.add(tuple(np.asarray(
+                        jax.random.key_data(s._dp_key(site, occ))
+                    ).tolist()))
+        assert len(keys) == 8
+
+    def test_noise_differs_across_rounds(self):
+        cfg = _cfg()
+        part = _parts(1)[0]
+        s = DAEFEngine(cfg, ExecutionPlan(
+            federation="async", merge="pairwise",
+            privacy=PrivacySpec(epsilon=8.0),
+        )).session()
+        m1 = s.round({"a": part})
+        state1 = [np.asarray(w) for w in s._ledger["a"].state[1][0]]
+        m2 = s.round({"a": part})
+        # same data, new round: fresh noise must land in the ledger
+        state2 = [np.asarray(w) for w in s._ledger["a"].state[1][0]]
+        assert not np.array_equal(state1[0], state2[0])
+        assert m1 is not None and m2 is not None
+
+
+# ---------------------------------------------------------------------------
+# Satellite: repeat reports within one round
+# ---------------------------------------------------------------------------
+
+class TestRepeatReports:
+    def test_sync_repeat_raises(self):
+        cfg = _cfg()
+        parts = _parts(2)
+        s = DAEFEngine(cfg, ExecutionPlan(merge="pairwise")).session()
+        with pytest.raises(PlanError, match="twice"):
+            s.round([("a", parts[0]), ("a", parts[1])])
+
+    def test_async_repeat_folds(self):
+        cfg = _cfg()
+        parts = _parts(2)
+        plan = ExecutionPlan(federation="async", merge="pairwise")
+        s_dup = DAEFEngine(cfg, plan).session()
+        m_dup = s_dup.round([("a", parts[0]), ("a", parts[1])])
+        assert s_dup._ledger["a"].submits == 2
+        # folding two blocks in one round == reporting them in two rounds
+        s_two = DAEFEngine(cfg, plan).session()
+        s_two.round({"a": parts[0]})
+        m_two = s_two.round({"a": parts[1]})
+        for a, b in zip(_weights(m_dup), _weights(m_two)):
+            np.testing.assert_allclose(a, b, **PARITY)
+
+    def test_async_secagg_repeat_raises(self):
+        # duplicated ids unbalance pairwise masks — must refuse, not corrupt
+        cfg = _cfg()
+        parts = _parts(2)
+        s = DAEFEngine(cfg, ExecutionPlan(
+            federation="async", merge="pairwise",
+            privacy=PrivacySpec(secagg=True),
+        )).session()
+        with pytest.raises(PlanError, match="secagg"):
+            s.round([("a", parts[0]), ("a", parts[1])])
+
+    def test_pair_sequence_equals_mapping(self):
+        cfg = _cfg()
+        parts = _parts(2)
+        plan = ExecutionPlan(federation="async", merge="pairwise")
+        m_map = DAEFEngine(cfg, plan).session().round(
+            {"a": parts[0], "b": parts[1]}
+        )
+        m_pairs = DAEFEngine(cfg, plan).session().round(
+            [("a", parts[0]), ("b", parts[1])]
+        )
+        for a, b in zip(_weights(m_map), _weights(m_pairs)):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: pad_rank + merge='tree' regression
+# ---------------------------------------------------------------------------
+
+class TestPaddedTreeMerge:
+    def test_padded_tree_matches_sequential_merge(self):
+        # Sites with fewer samples than features publish rank-deficient
+        # factors padded to m0 by dsvd.pad_rank; the stacked on-mesh tree
+        # must agree with the host sequential reduction of the same states.
+        cfg = _cfg()
+        rng = np.random.default_rng(7)
+        # n_p < M0 -> genuine zero-padding in the published factors
+        parts = [rng.normal(size=(M0, n)).astype(np.float32)
+                 for n in (4, 5, 4, 6)]
+        plan_tree = ExecutionPlan(federation="async", merge="tree")
+        plan_seq = ExecutionPlan(federation="async", merge="sequential")
+        m_tree = DAEFEngine(cfg, plan_tree).session().round(parts)
+        m_seq = DAEFEngine(cfg, plan_seq).session().round(parts)
+        for a, b in zip(_weights(m_tree), _weights(m_seq)):
+            np.testing.assert_allclose(a, b, **PARITY)
+
+    def test_pad_rank_preserves_gram(self):
+        f = dsvd.gram_to_factors(jnp.asarray(
+            np.random.default_rng(0).normal(size=(3, M0)).T @
+            np.random.default_rng(0).normal(size=(3, M0))
+        ))
+        padded = dsvd.pad_rank(f, M0)
+        np.testing.assert_allclose(
+            _factors_gram(padded), _factors_gram(f), atol=1e-5, rtol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Satellite: mid-session save/load
+# ---------------------------------------------------------------------------
+
+class TestSessionPersistence:
+    def test_roundtrip_async_dp(self, tmp_path):
+        cfg = _cfg()
+        parts = _parts()
+        engine = DAEFEngine(cfg, ExecutionPlan(
+            federation="async", merge="pairwise",
+            privacy=PrivacySpec(epsilon=8.0, budget_epsilon=100.0),
+        ))
+        s = engine.session()
+        s.round({"a": parts[0], "b": parts[1]})
+        s.round({"a": parts[2]})
+        path = str(tmp_path / "sess")
+        assert engine.save(s, path) == path
+        s2 = engine.load(path)
+        assert s2.clock == s.clock
+        assert s2.rounds_run == s.rounds_run
+        assert s2.sites == s.sites
+        assert s2._ledger["a"].submits == s._ledger["a"].submits
+        assert s2.privacy_spent("a") == s.privacy_spent("a")
+        assert s2.privacy_spent("b") == s.privacy_spent("b")
+        # the restored session continues identically
+        ma = s.round({"b": parts[3]})
+        mb = s2.round({"b": parts[3]})
+        for a, b in zip(_weights(ma), _weights(mb)):
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+    def test_roundtrip_sync_plain(self, tmp_path):
+        cfg = _cfg()
+        engine = DAEFEngine(cfg, ExecutionPlan(merge="pairwise"))
+        s = engine.session()
+        s.round(_parts())
+        path = str(tmp_path / "sess")
+        engine.save(s, path)
+        s2 = engine.load(path)
+        assert s2.rounds_run == 1
+        for a, b in zip(_weights(s.model), _weights(s2.model)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_model_checkpoints_still_load_as_models(self, tmp_path):
+        cfg = _cfg()
+        engine = DAEFEngine(cfg, ExecutionPlan())
+        model = engine.fit(jnp.asarray(_parts(1)[0]))
+        path = str(tmp_path / "model")
+        engine.save(model, path)
+        restored = engine.load(path)
+        assert isinstance(restored, daef.DAEFModel)
+        for a, b in zip(_weights(model), _weights(restored)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_unpersistable_site_id_raises(self, tmp_path):
+        cfg = _cfg()
+        engine = DAEFEngine(cfg, ExecutionPlan(federation="async",
+                                               merge="pairwise"))
+        s = engine.session()
+        s.round({("tuple", "id"): _parts(1)[0]})
+        with pytest.raises(PlanError, match="int or str"):
+            engine.save(s, str(tmp_path / "sess"))
+
+
+# ---------------------------------------------------------------------------
+# Threat model demo
+# ---------------------------------------------------------------------------
+
+class TestThreat:
+    def test_single_sample_reconstruction(self):
+        out = threat.demo(n_features=8)
+        assert out["relative_error"] < 1e-6
+
+    def test_reconstruction_degrades_under_dp(self):
+        # the motivating attack dies once the gram is released with DP noise
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=8)
+        x /= np.linalg.norm(x)
+        g = np.outer(x, x)
+        clean = threat.reconstruction_error(x, g)
+        sigma = dp.calibrate_sigma(1.0, 1e-5)
+        noised = np.asarray(dp._sym_noise(
+            jax.random.PRNGKey(0), (8, 8), sigma, jnp.float64
+        )) + g
+        assert clean < 1e-6
+        assert threat.reconstruction_error(x, noised) > 10 * clean
