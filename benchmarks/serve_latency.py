@@ -1,6 +1,6 @@
 """Serving latency microbenchmark.
 
-Three sections:
+Four sections:
 
 * **DAEF fleet serving (default)** — the `repro.engine` facade end to end:
   train K per-tenant anomaly detectors under an ``ExecutionPlan`` (vmap, and
@@ -14,6 +14,11 @@ Three sections:
   under a MIXED RAGGED load (most tenants trickle 1-4 samples, a burst
   cohort sends hundreds): both paths score the identical per-round
   requests, and the continuous record carries its ``speedup_vs_pad``.
+* **Per-tile vs deferred readback (default)** — the same continuous-batching
+  server with ``readback="per_tile"`` (depth-2 pipeline, one blocking
+  device->host transfer per tile) against ``readback="deferred"``
+  (scores/flags stay device-resident; one batched ``block_until_ready`` +
+  readback at flush) under the identical mixed-ragged load.
 * **LM decode (``--lm``)** — decode ms/token per architecture family (CPU,
   reduced configs), the host-measurable counterpart of the decode-shape
   rooflines.
@@ -212,6 +217,84 @@ def packing_records(k: int = 32, m0: int = 64, n_pad: int = 1024,
     return records
 
 
+def readback_records(k: int = 32, m0: int = 64, n_pad: int = 1024,
+                     rounds: int = 20, tile_width: int = 256,
+                     burst_frac: float = 0.2) -> list[dict]:
+    """Per-tile vs deferred device-resident readback, identical loads.
+
+    Both paths run the continuous-batching `FleetServer` over the same
+    mixed-ragged rounds; the only knob is ``readback``: ``"per_tile"``
+    blocks on a host transfer for tile t once t+1 is in flight (the old
+    depth-2 pipeline), ``"deferred"`` keeps scores/flags device-resident
+    until one batched `flush` readback — the hot loop never pays a
+    per-tile device->host sync.
+    """
+    from repro.core import daef
+    from repro.engine import DAEFEngine, ExecutionPlan
+    from repro.serving import FleetServer
+
+    cfg = daef.DAEFConfig(layer_sizes=(m0, 16, 32, m0), lam_hidden=0.9,
+                          lam_last=0.9)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(k, m0, 256)).astype(np.float32)
+    engine = DAEFEngine(cfg, ExecutionPlan(mode="vmap", tenants=k))
+    fl = engine.fit(xs, seeds=jnp.arange(k))
+
+    warm = 2
+    loads = []
+    for r in range(rounds + warm):
+        counts = _mixed_ragged_counts(k, n_pad, seed=300 + r,
+                                      burst_frac=burst_frac)
+        loads.append([
+            rng.normal(size=(m0, c)).astype(np.float32) for c in counts
+        ])
+
+    records = []
+    summaries = {}
+    for readback in ("per_tile", "deferred"):
+        server = FleetServer(engine, fl, tile_width=tile_width, rule="q90",
+                             use_cache=False, readback=readback)
+        server.warmup()
+        lat, served = [], 0
+        for r, reqs in enumerate(loads):
+            t0 = time.perf_counter()
+            rids = [server.submit(t, reqs[t]) for t in range(k)]
+            server.flush()
+            results = [server.take(rid) for rid in rids]
+            if r >= warm:
+                lat.append(time.perf_counter() - t0)
+                served += sum(res.scores.size for res in results)
+        summaries[readback] = latency_summary(lat, served)
+
+    speedup = summaries["deferred"]["scores_per_sec"] / max(
+        summaries["per_tile"]["scores_per_sec"], 1e-9)
+    shared = {
+        "api": "repro.serving",
+        "tenants": k,
+        "features": m0,
+        "pad": n_pad,
+        "rounds": rounds,
+        "burst_frac": burst_frac,
+        "load": "mixed-ragged",
+        "packing": "continuous",
+        "tile_width": tile_width,
+    }
+    for readback, s in summaries.items():
+        rec = {**shared, "readback": readback,
+               "p50_ms_per_round": s["p50_ms_per_round"],
+               "p95_ms_per_round": s["p95_ms_per_round"],
+               "scores_per_sec": s["scores_per_sec"]}
+        if readback == "deferred":
+            rec["speedup_vs_per_tile"] = round(speedup, 3)
+        records.append(rec)
+        print(f"readback[{readback}]: p50 {s['p50_ms_per_round']:.2f} / "
+              f"p95 {s['p95_ms_per_round']:.2f} ms/round, "
+              f"{s['scores_per_sec']:.0f} scores/sec"
+              + (f" ({speedup:.2f}x vs per_tile)"
+                 if readback == "deferred" else ""))
+    return records
+
+
 def append_trajectory(records: list[dict], out: str) -> None:
     """Append records to the JSON-list trajectory at ``out``."""
     path = Path(out)
@@ -266,6 +349,8 @@ if __name__ == "__main__":
                     help="also run the per-arch LM decode table")
     ap.add_argument("--no-packing", action="store_true",
                     help="skip the packed-vs-padded comparison section")
+    ap.add_argument("--no-readback", action="store_true",
+                    help="skip the per-tile vs deferred readback comparison")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"),
                     help="append fleet-serving records to this JSON-list "
                          "trajectory (default: repo root, committed per PR)")
@@ -273,6 +358,8 @@ if __name__ == "__main__":
     recs = fleet_records(k=args.tenants, n_pad=args.pad, rounds=args.rounds)
     if not args.no_packing:
         recs += packing_records(k=args.tenants, rounds=args.rounds)
+    if not args.no_readback:
+        recs += readback_records(k=args.tenants, rounds=args.rounds)
     if args.out:
         append_trajectory(recs, args.out)
     if args.lm:

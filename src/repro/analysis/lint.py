@@ -35,6 +35,13 @@ Rules (each finding carries file:line:col, a rule id and a fix hint):
   and unseeded host RNG is unauditable.  Release keys must be derived
   per (site, round) from the config seed (``fold_in`` — the
   ``FederationSession._dp_key`` idiom) and passed IN.
+* **RPR008** — hard-coded ``interpret=True`` in library code
+  (``src/repro`` outside ``kernels/*/ref.py``): pins every caller to the
+  Pallas interpreter, silently discarding accelerator compilation.
+  Backend selection belongs to the resolver chain
+  (``rolann_stats.ops._resolve_interpret``: explicit arg >
+  ``set_interpret_override`` > ``$REPRO_KERNEL_INTERPRET`` > backend
+  probe); reference oracles under ``kernels/*/ref.py`` are exempt.
 
 Escapes: append ``# repro-lint: disable=RPR001`` (comma-separate several
 ids) to a line to suppress findings on it, or grandfather existing
@@ -88,6 +95,7 @@ RULES = {
     "RPR005": "blanket warnings filter",
     "RPR006": "wall-clock/stdlib random in library code",
     "RPR007": "fixed PRNG key / host randomness in privacy code",
+    "RPR008": "hard-coded interpret=True in library code",
 }
 
 
@@ -292,10 +300,11 @@ class _TaintWalker:
 
 class _Checker(ast.NodeVisitor):
     def __init__(self, path: str, source: str, *, library: bool,
-                 privacy: bool = False):
+                 privacy: bool = False, kernel_ref: bool = False):
         self.path = path
         self.library = library
         self.privacy = privacy
+        self.kernel_ref = kernel_ref
         self.findings: list[Finding] = []
         self.imports = _Imports()
         self._fn_stack: list[ast.FunctionDef | ast.AsyncFunctionDef] = []
@@ -457,6 +466,23 @@ class _Checker(ast.NodeVisitor):
                     "default_rng in host-side test/driver code)",
                 )
 
+        if self.library and not self.kernel_ref:
+            for kw in node.keywords:
+                if kw.arg == "interpret" and isinstance(
+                    kw.value, ast.Constant
+                ) and kw.value.value is True:
+                    self.add(
+                        kw.value, "RPR008",
+                        "hard-coded interpret=True in library code pins this "
+                        "call to the Pallas interpreter — accelerator "
+                        "compilation is silently discarded for every caller",
+                        "pass interpret through (None resolves via "
+                        "rolann_stats.ops._resolve_interpret: explicit arg > "
+                        "set_interpret_override > $REPRO_KERNEL_INTERPRET > "
+                        "backend probe); only kernels/*/ref.py oracles may "
+                        "pin it",
+                    )
+
         if self.privacy:
             if leaf == "PRNGKey" and node.args and isinstance(
                 node.args[0], ast.Constant
@@ -522,6 +548,16 @@ def _is_privacy_path(path: Path) -> bool:
     return False
 
 
+def _is_kernel_ref_path(path: Path) -> bool:
+    """``src/repro/kernels/<kernel>/ref.py`` — the pure-jnp oracles, the one
+    place a pinned ``interpret=True`` is legitimate (RPR008 exemption)."""
+    parts = path.resolve().parts
+    if "repro" in parts and "src" in parts:
+        sub = parts[parts.index("repro") + 1:]
+        return len(sub) >= 2 and sub[0] == "kernels" and sub[-1] == "ref.py"
+    return False
+
+
 def check_source(source: str, path: str = "<string>",
                  *, library: bool | None = None,
                  privacy: bool | None = None) -> list[Finding]:
@@ -541,7 +577,8 @@ def check_source(source: str, path: str = "<string>",
         return [Finding(path=path, line=e.lineno or 0, col=e.offset or 0,
                         rule="RPR000", message=f"syntax error: {e.msg}",
                         hint="fix the file before linting")]
-    checker = _Checker(path, source, library=library, privacy=privacy)
+    checker = _Checker(path, source, library=library, privacy=privacy,
+                       kernel_ref=_is_kernel_ref_path(Path(path)))
     checker.visit(tree)
     return sorted(checker.findings, key=lambda f: (f.line, f.col, f.rule))
 

@@ -50,7 +50,9 @@ class DAEFConfig:
     aux_bias: str = "zero"            # decoder bias scheme (see elm_ae)
     method: str = "gram"              # "gram" fast path | "svd" paper-faithful
     seed: int = 0                     # shared randomness across federated nodes
-    stats_backend: str | None = None  # Gram-stats producer: "einsum" | "fused"
+    # Gram-stats producer: "einsum" | "fused" | "auto" (measured winner from
+    # the autotune cache); None defers to $REPRO_STATS_BACKEND then "auto".
+    stats_backend: str | None = None
                                       # | None (resolve $REPRO_STATS_BACKEND)
     gram_solver: str = "chol"         # gram-knowledge weight solve: "chol"
                                       # (direct Cholesky, the fast default) |

@@ -21,7 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import activations, initializers, rolann
+from repro.core import activations, initializers, rolann, stats_backend
 
 Array = jnp.ndarray
 
@@ -127,10 +127,24 @@ def accumulate_layer_stats(
     accumulated via `rolann.accumulate_stats`; summed over all chunks this
     equals `train_layer`'s one-shot statistics, so the solved weights match
     the non-streaming fit.  ``weights`` masks padded sample columns.
+
+    On the fused backend (non-linear activations) the whole fold is ONE
+    ``stats_backend.fused_chunk_acc`` dispatch — the stage-1 matmul,
+    activation, target transform and (G, M) accumulate run in a single
+    Pallas launch, so the chunk activation never materializes to HBM.  The
+    einsum backend (and the linear last layer, which has a cheaper shared-F
+    closed form) keeps the two-step path below.
     """
+    resolved = stats_backend.resolve(backend)
+    if resolved == "fused" and act.name != "linear":
+        g, m = stats_backend.fused_chunk_acc(
+            stats.g, stats.m, h_l, w_c1, b_c1, weights,
+            act=act, backend=resolved,
+        )
+        return rolann.RolannStats(g=g, m=m)
     h_c1 = act.fn(w_c1.T @ h_l + b_c1[:, None])
     return rolann.accumulate_stats(
-        stats, h_c1, h_l, act, weights=weights, backend=backend
+        stats, h_c1, h_l, act, weights=weights, backend=resolved
     )
 
 

@@ -24,9 +24,11 @@ the choice into configuration:
                   data-parallel federation of `core.sharded.fit_on_mesh`.
 * ``mesh_devices`` — devices along the tenant axis (None = the largest
                   fleet-compatible mesh over all devices).
-* ``stats_backend`` — Gram-stats producer ("einsum" | "fused"); overrides
-                  ``DAEFConfig.stats_backend``; None defers to the config /
-                  ``$REPRO_STATS_BACKEND`` precedence chain.
+* ``stats_backend`` — Gram-stats producer ("einsum" | "fused" | "auto", the
+                  measured winner from the committed autotune cache);
+                  overrides ``DAEFConfig.stats_backend``; None defers to the
+                  config / ``$REPRO_STATS_BACKEND`` precedence chain
+                  (default "auto").
 * ``merge``     — federation reduce strategy for ``DAEFEngine.reduce`` and
                   ``FederationSession.round``: "sequential" (left-to-right
                   host reduce / the exact layer-synchronized protocol),

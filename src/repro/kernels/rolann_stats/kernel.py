@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import activations
+
 
 def _kernel(x_ref, fsq_ref, fd_ref, g_ref, m_ref, *, n_tiles: int):
     ni = pl.program_id(1)
@@ -264,3 +266,183 @@ def rolann_stats_kernel_acc_batched(
         input_output_aliases={0: 0, 1: 1},
         interpret=interpret,
     )(g, mv, xa, fsq, fd)
+
+
+# ---------------------------------------------------------------------------
+# Fused-chunk variants: one launch per streamed chunk does the WHOLE per-layer
+# fold — the auxiliary stage-1 matmul + activation, the target transform
+# (clip -> f^-1 -> f'), the bias-row augmentation AND the (G, M) accumulation.
+# The chunk activation h_c1 = f(W_c1^T h + b_c1) lives only in registers/VMEM;
+# the unfused path materializes it to HBM between the XLA matmul and the
+# stats kernel, paying a [m_c1, n] round-trip per chunk per layer.
+#
+# Cost note: the stage-1 matmul is recomputed once per OUTPUT grid step (the
+# target row changes, the activation does not) — o * 2*m_l*m_c1*block_n
+# redundant FLOPs per tile.  DAEF layer widths are small (tens), so the fold
+# is bandwidth-bound and trading MXU FLOPs for the eliminated HBM round-trip
+# is the right side of the roofline; see docs/kernels.md.
+# ---------------------------------------------------------------------------
+
+def _fused_chunk_deltas(act, xa, d, mask):
+    """Shared tail of the fused-chunk kernels: target transform + this tile's
+    (ΔG, ΔM) contribution (the callers fold these into the output refs)."""
+    dbar = act.inv(act.clip_to_range(d))     # [1, bn]
+    fp = act.deriv(dbar)
+    fsq = fp * fp
+    fd = fsq * dbar
+    fsq = fsq * mask                         # padded columns contribute 0
+    fd = fd * mask
+    scaled = xa * fsq                        # VPU
+    dg = jax.lax.dot_general(
+        scaled, xa, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    dm = jax.lax.dot_general(
+        xa, fd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).T                                      # [1, ma]
+    return dg, dm
+
+
+def _kernel_fused_chunk(g_in_ref, m_in_ref, h_ref, d_ref, w_ref, b_ref,
+                        mask_ref, g_ref, m_ref, *, act_name: str):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _seed():
+        g_ref[...] = g_in_ref[...]
+        m_ref[...] = m_in_ref[...]
+
+    act = activations.get(act_name, invertible_required=True)
+    h = h_ref[...]                           # [m_l, bn]
+    w = w_ref[...]                           # [m_l, m_c1]
+    b = b_ref[...]                           # [m_c1, 1]
+    z = jax.lax.dot_general(                 # W_c1^T h  (MXU)
+        w, h, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + b
+    a = act.fn(z)                            # [m_c1, bn], never leaves VMEM
+    xa = jnp.concatenate(                    # bias-row augmentation
+        [a, jnp.ones((1, a.shape[1]), a.dtype)], axis=0
+    )
+    dg, dm = _fused_chunk_deltas(act, xa, d_ref[...], mask_ref[...])
+    g_ref[0] += dg
+    m_ref[...] += dm
+
+
+def rolann_fused_chunk_kernel(
+    g: jnp.ndarray,        # [o, ma, ma] running Gram accumulator (ma = m_c1+1)
+    mv: jnp.ndarray,       # [o, ma]     running M accumulator
+    h: jnp.ndarray,        # [m_l, n]    chunk layer inputs (o == m_l)
+    w: jnp.ndarray,        # [m_l, m_c1] stage-1 weights
+    b: jnp.ndarray,        # [m_c1, 1]   stage-1 bias (column)
+    mask: jnp.ndarray,     # [1, n]      1 for valid sample columns
+    *,
+    act_name: str,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """One launch: recompute the chunk activation and fold (g, mv) in place.
+
+    ``h`` is read through TWO block specs — the full [m_l, block] tile feeds
+    the stage-1 matmul, and the [1, block] row of the current output feeds
+    the target transform (ELM-AE reconstructs its own input, so targets ARE
+    ``h``).  The accumulators alias onto the outputs exactly like
+    ``rolann_stats_kernel_acc``.
+    """
+    o, ma, _ = g.shape
+    m_l, n = h.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+
+    return pl.pallas_call(
+        functools.partial(_kernel_fused_chunk, act_name=act_name),
+        grid=(o, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, ma, ma), lambda oi, ni: (oi, 0, 0)),
+            pl.BlockSpec((1, ma), lambda oi, ni: (oi, 0)),
+            pl.BlockSpec((m_l, block_n), lambda oi, ni: (0, ni)),
+            pl.BlockSpec((1, block_n), lambda oi, ni: (oi, ni)),
+            pl.BlockSpec(w.shape, lambda oi, ni: (0, 0)),
+            pl.BlockSpec(b.shape, lambda oi, ni: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda oi, ni: (0, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ma, ma), lambda oi, ni: (oi, 0, 0)),
+            pl.BlockSpec((1, ma), lambda oi, ni: (oi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((o, ma, ma), jnp.float32),
+            jax.ShapeDtypeStruct((o, ma), jnp.float32),
+        ],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(g, mv, h, h, w, b, mask)
+
+
+def _kernel_fused_chunk_batched(g_in_ref, m_in_ref, h_ref, d_ref, w_ref,
+                                b_ref, mask_ref, g_ref, m_ref, *,
+                                act_name: str):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _seed():
+        g_ref[...] = g_in_ref[...]
+        m_ref[...] = m_in_ref[...]
+
+    act = activations.get(act_name, invertible_required=True)
+    h = h_ref[0]                             # [m_l, bn]
+    w = w_ref[0]                             # [m_l, m_c1]
+    b = b_ref[0]                             # [m_c1, 1]
+    z = jax.lax.dot_general(
+        w, h, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + b
+    a = act.fn(z)
+    xa = jnp.concatenate([a, jnp.ones((1, a.shape[1]), a.dtype)], axis=0)
+    dg, dm = _fused_chunk_deltas(act, xa, d_ref[0], mask_ref[0])
+    g_ref[0, 0] += dg
+    m_ref[0] += dm
+
+
+def rolann_fused_chunk_kernel_batched(
+    g: jnp.ndarray,        # [k, o, ma, ma]
+    mv: jnp.ndarray,       # [k, o, ma]
+    h: jnp.ndarray,        # [k, m_l, n]
+    w: jnp.ndarray,        # [k, m_l, m_c1]
+    b: jnp.ndarray,        # [k, m_c1, 1]
+    mask: jnp.ndarray,     # [k, 1, n]
+    *,
+    act_name: str,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Tenant-batched fused chunk fold: one launch for a whole fleet chunk
+    (per-tenant stage-1 parameters included) — the ``custom_vmap`` target of
+    ``stats_backend.fused_chunk_acc`` under the fleet's tenant vmap."""
+    k, o, ma, _ = g.shape
+    m_l, n = h.shape[1:]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+
+    return pl.pallas_call(
+        functools.partial(_kernel_fused_chunk_batched, act_name=act_name),
+        grid=(k, o, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, ma, ma), lambda ki, oi, ni: (ki, oi, 0, 0)),
+            pl.BlockSpec((1, 1, ma), lambda ki, oi, ni: (ki, oi, 0)),
+            pl.BlockSpec((1, m_l, block_n), lambda ki, oi, ni: (ki, 0, ni)),
+            pl.BlockSpec((1, 1, block_n), lambda ki, oi, ni: (ki, oi, ni)),
+            pl.BlockSpec((1, *w.shape[1:]), lambda ki, oi, ni: (ki, 0, 0)),
+            pl.BlockSpec((1, *b.shape[1:]), lambda ki, oi, ni: (ki, 0, 0)),
+            pl.BlockSpec((1, 1, block_n), lambda ki, oi, ni: (ki, 0, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ma, ma), lambda ki, oi, ni: (ki, oi, 0, 0)),
+            pl.BlockSpec((1, 1, ma), lambda ki, oi, ni: (ki, oi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, o, ma, ma), jnp.float32),
+            jax.ShapeDtypeStruct((k, o, ma), jnp.float32),
+        ],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(g, mv, h, h, w, b, mask)

@@ -16,16 +16,34 @@ backend trades ~1e-7 relative error for the fusion win on x64 runs.
 ``interpret`` resolution (None -> "am I on CPU?") happens *outside* the
 jitted body: the resolved value is part of the jit cache key, so a cached
 trace can never bake a stale backend decision in after the default backend
-changes (e.g. a host trace preceding TPU initialization).
+changes.  The backend probe itself is cached module-wide (one
+``jax.default_backend()`` call per process instead of one per op call); if
+your process initializes an accelerator AFTER the first kernel call — rare,
+but possible with late ``jax.distributed`` setup — flip the decision
+explicitly via :func:`set_interpret_override`, the
+``$REPRO_KERNEL_INTERPRET`` env var, or ``_backend_is_cpu.cache_clear()``.
+
+``block_n`` resolution: ``None`` (the default) asks the shape-keyed
+autotuner (`repro.kernels.autotune`) for the measured winner on this
+backend, falling back to the static pow2-clamp heuristic on a cache miss.
+An explicit ``block_n`` is honoured as requested — and warns if the legacy
+[128, 512] clamp would have silently altered it.
 """
 from __future__ import annotations
 
+import functools
+import os
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
+from repro.kernels.autotune import next_pow2  # noqa: F401  (re-export)
 from repro.kernels.rolann_stats.kernel import (
+    rolann_fused_chunk_kernel,
+    rolann_fused_chunk_kernel_batched,
     rolann_stats_kernel,
     rolann_stats_kernel_acc,
     rolann_stats_kernel_acc_batched,
@@ -34,26 +52,73 @@ from repro.kernels.rolann_stats.kernel import (
 from repro.kernels.rolann_stats.ref import rolann_stats_ref
 
 
-def next_pow2(x: int) -> int:
-    """Smallest power of two >= x (1 for x <= 1)."""
-    return 1 if x <= 1 else 1 << (x - 1).bit_length()
-
-
 def _resolve_block_n(n: int, block_n: int) -> int:
-    """Clamp the requested sample-axis block to a sane lane-aligned size.
+    """Clamp an explicitly requested sample-axis block to a sane size.
 
     The padded block never exceeds 512 (VMEM pressure), never exceeds the
     next power of two of ``n`` (no point padding 130 samples to 512), and
-    is floored at 128 lanes unless the caller asked for less explicitly.
+    the clamp window is floored at 128 lanes.  A request the clamp alters
+    is WARNED about — user overrides are never silently ignored (pass
+    ``block_n=None`` to get the autotuned/heuristic choice instead).
     """
     if block_n < 1:
         raise ValueError(f"block_n must be >= 1, got {block_n}")
     cap = max(128, min(next_pow2(n), 512))
-    return min(block_n, cap)
+    resolved = min(block_n, cap)
+    if resolved != block_n:
+        warnings.warn(
+            f"explicit block_n={block_n} clipped to {resolved} for n={n} "
+            f"(cap = max(128, min(next_pow2(n), 512)) = {cap}); pass "
+            "block_n=None for the autotuned choice, or a value within the "
+            "cap to silence this",
+            RuntimeWarning,
+            stacklevel=4,
+        )
+    return resolved
+
+
+def _pick_block_n(kind: str, n: int, m: int, o: int,
+                  block_n: int | None) -> int:
+    """Host-side block resolution (pre-jit, so the result is a static jit
+    argument): explicit request (clamped, warned) > autotune cache >
+    static heuristic."""
+    if block_n is None:
+        return autotune.best_block_n(kind, n=n, m=m, o=o)
+    return _resolve_block_n(n, block_n)
+
+
+_INTERPRET_ENV = "REPRO_KERNEL_INTERPRET"
+_INTERPRET_OVERRIDE: bool | None = None
+
+
+def set_interpret_override(value: bool | None) -> None:
+    """Force (True/False) or restore auto-detection (None) of interpret mode
+    for every kernel in this module — the test/debug hook, and the escape
+    hatch for processes whose default backend changes after the first call
+    (the cached probe would otherwise keep the stale decision)."""
+    global _INTERPRET_OVERRIDE
+    _INTERPRET_OVERRIDE = None if value is None else bool(value)
+
+
+@functools.lru_cache(maxsize=1)
+def _backend_is_cpu() -> bool:
+    """One probe per process (``jax.default_backend()`` walks the backend
+    registry — too heavy for every op call on a hot streaming path)."""
+    return jax.default_backend() == "cpu"
 
 
 def _resolve_interpret(interpret: bool | None) -> bool:
-    return jax.default_backend() == "cpu" if interpret is None else bool(interpret)
+    """explicit arg > set_interpret_override > $REPRO_KERNEL_INTERPRET >
+    cached am-I-on-CPU probe.  Env/override are read at call time (never
+    baked into a trace — the resolved bool is the jit cache key)."""
+    if interpret is not None:
+        return bool(interpret)
+    if _INTERPRET_OVERRIDE is not None:
+        return _INTERPRET_OVERRIDE
+    env = os.environ.get(_INTERPRET_ENV)
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return _backend_is_cpu()
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -63,7 +128,6 @@ def _rolann_stats(xa, fsq, fd, *, block_n: int, interpret: bool):
     out_dtype = jnp.result_type(xa, fsq, fd)
     if n == 0 or m == 0 or o == 0:
         return (jnp.zeros((o, m, m), out_dtype), jnp.zeros((o, m), out_dtype))
-    block_n = _resolve_block_n(n, block_n)
     pad = (-n) % block_n
     if pad:
         xa = jnp.pad(xa, ((0, 0), (0, pad)))
@@ -84,12 +148,19 @@ def rolann_stats(
     fsq: jnp.ndarray,
     fd: jnp.ndarray,
     *,
-    block_n: int = 512,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ):
-    """Fused (G, M) sufficient statistics.  xa [m, n]; fsq, fd [o, n]."""
+    """Fused (G, M) sufficient statistics.  xa [m, n]; fsq, fd [o, n].
+
+    ``block_n=None`` (default) takes the autotuned block for this shape
+    bucket (falling back to the static heuristic on a cache miss).
+    """
+    m, n = xa.shape
     return _rolann_stats(
-        xa, fsq, fd, block_n=block_n, interpret=_resolve_interpret(interpret)
+        xa, fsq, fd,
+        block_n=_pick_block_n("stats", n, m, fsq.shape[0], block_n),
+        interpret=_resolve_interpret(interpret),
     )
 
 
@@ -103,7 +174,6 @@ def _rolann_stats_batched(xa, fsq, fd, *, block_n: int, interpret: bool):
             jnp.zeros((k, o, m, m), out_dtype),
             jnp.zeros((k, o, m), out_dtype),
         )
-    block_n = _resolve_block_n(n, block_n)
     pad = (-n) % block_n
     if pad:
         xa = jnp.pad(xa, ((0, 0), (0, 0), (0, pad)))
@@ -124,7 +194,7 @@ def rolann_stats_batched(
     fsq: jnp.ndarray,
     fd: jnp.ndarray,
     *,
-    block_n: int = 512,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ):
     """Tenant-batched fused stats: xa [k, m, n]; fsq, fd [k, o, n].
@@ -135,8 +205,11 @@ def rolann_stats_batched(
     carries a ``custom_vmap`` rule that rewrites the vmapped per-tenant call
     into one batched launch (instead of Pallas' generic batching rule).
     """
+    k, m, n = xa.shape
     return _rolann_stats_batched(
-        xa, fsq, fd, block_n=block_n, interpret=_resolve_interpret(interpret)
+        xa, fsq, fd,
+        block_n=_pick_block_n("stats_batched", n, m, fsq.shape[1], block_n),
+        interpret=_resolve_interpret(interpret),
     )
 
 
@@ -154,7 +227,6 @@ def _rolann_stats_acc(g, mv, xa, fsq, fd, *, block_n: int, interpret: bool):
     if n == 0 or m == 0 or o == 0:
         return g, mv
     out_dtype = g.dtype
-    block_n = _resolve_block_n(n, block_n)
     pad = (-n) % block_n
     if pad:
         xa = jnp.pad(xa, ((0, 0), (0, pad)))
@@ -179,7 +251,7 @@ def rolann_stats_acc(
     fsq: jnp.ndarray,
     fd: jnp.ndarray,
     *,
-    block_n: int = 512,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ):
     """Fold one chunk into running stats: (g, mv) += stats(xa, fsq, fd).
@@ -189,8 +261,10 @@ def rolann_stats_acc(
     caller (a scan carry, or a streaming step jitted with donated
     accumulators) the fold is in place — no separate add, no re-zeroing.
     """
+    m, n = xa.shape
     return _rolann_stats_acc(
-        g, mv, xa, fsq, fd, block_n=block_n,
+        g, mv, xa, fsq, fd,
+        block_n=_pick_block_n("stats_acc", n, m, fsq.shape[0], block_n),
         interpret=_resolve_interpret(interpret),
     )
 
@@ -203,7 +277,6 @@ def _rolann_stats_acc_batched(g, mv, xa, fsq, fd, *, block_n: int,
     if n == 0 or m == 0 or o == 0 or k == 0:
         return g, mv
     out_dtype = g.dtype
-    block_n = _resolve_block_n(n, block_n)
     pad = (-n) % block_n
     if pad:
         xa = jnp.pad(xa, ((0, 0), (0, 0), (0, pad)))
@@ -228,7 +301,7 @@ def rolann_stats_acc_batched(
     fsq: jnp.ndarray,
     fd: jnp.ndarray,
     *,
-    block_n: int = 512,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ):
     """Tenant-batched accumulating fold: g [k, o, m, m], xa [k, m, n_chunk].
@@ -237,17 +310,145 @@ def rolann_stats_acc_batched(
     stats — the streamed fleet fit reaches this through the ``custom_vmap``
     rule on ``stats_backend.gram_stats_acc``.
     """
+    k, m, n = xa.shape
     return _rolann_stats_acc_batched(
-        g, mv, xa, fsq, fd, block_n=block_n,
+        g, mv, xa, fsq, fd,
+        block_n=_pick_block_n("stats_acc_batched", n, m, fsq.shape[1], block_n),
+        interpret=_resolve_interpret(interpret),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused-chunk variants — one launch per streamed chunk that RECOMPUTES the
+# layer activation (tile matmul + act) inside the kernel and folds (G, M)
+# in-register, so the [m_c1, n] activation never round-trips through HBM
+# between the matmul and the accumulate.  ELM-AE targets are the layer input
+# itself, so the kernel reads target rows straight out of `h`.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("act_name", "block_n", "interpret"))
+def _rolann_fused_chunk(g, mv, h, w, b, mask, *, act_name: str, block_n: int,
+                        interpret: bool):
+    m_l, n = h.shape
+    if n == 0 or m_l == 0 or g.shape[0] == 0:
+        return g, mv
+    out_dtype = g.dtype
+    pad = (-n) % block_n
+    if pad:
+        # Padded columns carry mask 0, so their fsq/fd contributions vanish
+        # exactly — padding never changes the folded stats.
+        h = jnp.pad(h, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, pad),))
+    g, mv = rolann_fused_chunk_kernel(
+        g.astype(jnp.float32),
+        mv.astype(jnp.float32),
+        h.astype(jnp.float32),
+        w.astype(jnp.float32),
+        b.astype(jnp.float32).reshape(-1, 1),
+        mask.astype(jnp.float32).reshape(1, -1),
+        act_name=act_name,
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return g.astype(out_dtype), mv.astype(out_dtype)
+
+
+def rolann_fused_chunk(
+    g: jnp.ndarray,
+    mv: jnp.ndarray,
+    h: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    *,
+    act_name: str,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fold one streamed chunk into running stats, activation recomputed
+    in-kernel.
+
+    g [o, ma, ma], mv [o, ma] with o == m_l (ELM-AE reconstructs its input)
+    and ma == m_c1 + 1; h [m_l, n_chunk] is the chunk's layer input;
+    w [m_l, m_c1], b [m_c1] are the stage-1 encoder; mask [n_chunk] weights
+    samples (None -> all ones; padded tail columns get mask 0 so ragged
+    chunks fold exactly).  One Pallas launch per chunk — the [m_c1, n]
+    activation lives only in VMEM/registers, never in HBM.
+    """
+    m_l, n = h.shape
+    if mask is None:
+        mask = jnp.ones((n,), h.dtype)
+    return _rolann_fused_chunk(
+        g, mv, h, w, b, mask,
+        act_name=act_name,
+        block_n=_pick_block_n("fused_chunk", n, m_l, g.shape[0], block_n),
+        interpret=_resolve_interpret(interpret),
+    )
+
+
+@partial(jax.jit, static_argnames=("act_name", "block_n", "interpret"))
+def _rolann_fused_chunk_batched(g, mv, h, w, b, mask, *, act_name: str,
+                                block_n: int, interpret: bool):
+    k, m_l, n = h.shape
+    if n == 0 or m_l == 0 or k == 0 or g.shape[1] == 0:
+        return g, mv
+    out_dtype = g.dtype
+    pad = (-n) % block_n
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    g, mv = rolann_fused_chunk_kernel_batched(
+        g.astype(jnp.float32),
+        mv.astype(jnp.float32),
+        h.astype(jnp.float32),
+        w.astype(jnp.float32),
+        b.astype(jnp.float32).reshape(k, -1, 1),
+        mask.astype(jnp.float32).reshape(k, 1, -1),
+        act_name=act_name,
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return g.astype(out_dtype), mv.astype(out_dtype)
+
+
+def rolann_fused_chunk_batched(
+    g: jnp.ndarray,
+    mv: jnp.ndarray,
+    h: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    *,
+    act_name: str,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+):
+    """Tenant-batched fused-chunk fold: g [k, o, ma, ma], h [k, m_l, n_chunk],
+    w [k, m_l, m_c1], b [k, m_c1], mask [k, n_chunk] or None.
+
+    One launch folds a whole fleet's chunk — the streamed fleet fit reaches
+    this through the ``custom_vmap`` rule on ``stats_backend.fused_chunk_acc``.
+    """
+    k, m_l, n = h.shape
+    if mask is None:
+        mask = jnp.ones((k, n), h.dtype)
+    return _rolann_fused_chunk_batched(
+        g, mv, h, w, b, mask,
+        act_name=act_name,
+        block_n=_pick_block_n("fused_chunk_batched", n, m_l, g.shape[1],
+                              block_n),
         interpret=_resolve_interpret(interpret),
     )
 
 
 __all__ = [
+    "rolann_fused_chunk",
+    "rolann_fused_chunk_batched",
     "rolann_stats",
     "rolann_stats_acc",
     "rolann_stats_acc_batched",
     "rolann_stats_batched",
     "rolann_stats_ref",
     "next_pow2",
+    "set_interpret_override",
 ]

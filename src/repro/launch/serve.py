@@ -365,11 +365,13 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.25,
                     help="fleet mode: synthetic dataset scale")
     ap.add_argument("--stats-backend", default=None,
-                    choices=["einsum", "fused"],
+                    choices=["einsum", "fused", "auto"],
                     help="fleet mode: Gram-stats producer (default: "
-                         "$REPRO_STATS_BACKEND or einsum; 'fused' routes "
-                         "training stats through the Pallas rolann_stats "
-                         "kernel — interpret mode on CPU)")
+                         "$REPRO_STATS_BACKEND or 'auto', which picks the "
+                         "measured winner from the committed autotune cache "
+                         "for this platform; 'fused' forces training stats "
+                         "through the Pallas rolann_stats kernels — "
+                         "interpret mode on CPU)")
     ap.add_argument("--chunk-samples", type=int, default=0,
                     help="fleet mode: train with a streaming (chunked) "
                          "ExecutionPlan — per-layer Gram stats accumulate "

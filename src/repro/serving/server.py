@@ -8,10 +8,14 @@ Ties the serving pieces together on top of `DAEFEngine`:
   that gathers each slot's tenant model, scores, NaN-masks the slot padding
   and thresholds — scores + flags in a single dispatch (the pad-to-max
   baseline pays two);
-* **double buffering** — the dispatch is asynchronous and the tile input
-  buffer is donated; the server keeps one tile in flight and reads tile
-  ``t`` back to the host only after tile ``t+1`` has been dispatched, so
-  host readout overlaps device compute;
+* **deferred device-resident readback** — the dispatch is asynchronous and
+  the tile input buffer is donated; scores/flags stay ON DEVICE while up to
+  ``max_inflight`` tiles accumulate, and host readback (`np.asarray`, which
+  blocks) happens in a batch at `flush` — the hot loop never pays a
+  per-tile device->host transfer.  ``readback="per_tile"`` restores the
+  depth-2 pipeline (read tile ``t`` back after ``t+1`` dispatches) for
+  latency-sensitive single-request serving and for the A/B benchmark
+  (`benchmarks/serve_latency.py`);
 * **score/threshold cache** — keyed on ``(tenant, model_version,
   sample_hash)`` (`cache.ScoreCache`); requests whose samples were already
   scored against an unchanged tenant complete without any dispatch;
@@ -94,7 +98,15 @@ class FleetServer:
         use_cache: bool = True,
         cache_entries: int = 1 << 17,
         sketch_bins: int = 1024,
+        readback: str = "deferred",
+        max_inflight: int = 32,
     ):
+        if readback not in ("deferred", "per_tile"):
+            raise PlanError(
+                f"readback must be 'deferred' or 'per_tile', got {readback!r}"
+            )
+        if max_inflight < 1:
+            raise PlanError(f"max_inflight must be >= 1, got {max_inflight}")
         if not isinstance(state, fleet.DAEFFleet):
             raise PlanError(
                 "FleetServer serves a DAEFFleet; wrap a single model via "
@@ -126,6 +138,8 @@ class FleetServer:
         #: One-time donation probe result (filled by `warmup`): does the
         #: donated tile buffer actually alias on this backend?
         self.donation: donation_mod.DonationReport | None = None
+        self.readback = readback
+        self.max_inflight = max_inflight if readback == "deferred" else 1
         self._inflight: deque = deque()
         self._next_id = 0
         self.results: dict[int, ScoreResult] = {}
@@ -270,8 +284,15 @@ class FleetServer:
     # ------------------------------------------------------------------
 
     def step(self) -> bool:
-        """Pack + dispatch one tile; harvest the previous one (double
-        buffer).  Returns False when the queue had no work."""
+        """Pack + dispatch one tile, keeping results device-resident.
+
+        ``readback="deferred"`` (default): scores/flags from up to
+        ``max_inflight`` dispatches stay on device — no host transfer, no
+        synchronization — until `flush` reads them back in one batch.
+        ``readback="per_tile"``: depth-2 pipeline, tile ``t`` is read back
+        (blocking) once ``t+1`` is in flight.  Returns False when the queue
+        had no work.
+        """
         tile = self.packer.pack(self.queue)
         if tile is None:
             return False
@@ -288,16 +309,25 @@ class FleetServer:
         self.stats["dispatches"] += 1
         self.stats["dispatched_cols"] += int(np.prod(tile.x.shape[::2]))
         self._inflight.append((tile, errs, flags))
-        # Depth-2 pipeline: read tile t back only after t+1 is in flight.
-        while len(self._inflight) > 1:
+        # Deferred mode accumulates device-resident results (bounded by
+        # max_inflight so queued buffers can't grow without limit); per-tile
+        # mode is the depth-2 pipeline (read t back once t+1 is in flight).
+        while len(self._inflight) > self.max_inflight:
             self._harvest()
         return True
 
     def flush(self) -> int:
         """Drain the queue and all in-flight tiles; returns completed
-        request count available in ``results``."""
+        request count available in ``results``.
+
+        This is where deferred readback synchronizes: every queued device
+        result is awaited at once (`jax.block_until_ready`), then harvested
+        — the only blocking device->host transfer in the deferred hot loop.
+        """
         while self.step():
             pass
+        if self._inflight:
+            jax.block_until_ready([buf[1:] for buf in self._inflight])
         while self._inflight:
             self._harvest()
         return len(self.results)

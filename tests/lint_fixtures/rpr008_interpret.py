@@ -1,0 +1,28 @@
+# repro-lint: library
+"""RPR008 fixture: hard-coded interpret=True in library code."""
+import functools
+
+
+def bad_pinned_call(kernel, x):
+    return pallas_call(kernel, interpret=True)(x)            # line 7: RPR008
+
+
+def bad_pinned_partial(op):
+    return functools.partial(op, interpret=True)             # line 11: RPR008
+
+
+def bad_pinned_wrapper(g, mv, xa, fsq, fd):
+    return rolann_stats_acc(g, mv, xa, fsq, fd, interpret=True)  # line 15: RPR008
+
+
+def ok_interpret_false(kernel, x):
+    return pallas_call(kernel, interpret=False)(x)
+
+
+def ok_interpret_resolved(kernel, x, interpret=None):
+    # the resolver chain decides; None is the library default
+    return pallas_call(kernel, interpret=interpret)(x)
+
+
+def ok_disable_escape(kernel, x):
+    return pallas_call(kernel, interpret=True)(x)  # repro-lint: disable=RPR008

@@ -362,3 +362,58 @@ def test_no_retrace_after_warmup_mixed_ragged(served):
             server.flush()
         results = [server.take(rid) for rid in rids]
     assert all(np.isfinite(r.scores).all() for r in results)
+
+
+# ----------------------------------------------------------------------
+# Deferred device-resident readback
+# ----------------------------------------------------------------------
+
+def test_readback_validation():
+    engine, fl = _train_served()
+    with pytest.raises(PlanError, match="readback"):
+        FleetServer(engine, fl, readback="bogus")
+    with pytest.raises(PlanError, match="max_inflight"):
+        FleetServer(engine, fl, readback="deferred", max_inflight=0)
+    per_tile = FleetServer(engine, fl, readback="per_tile", max_inflight=32)
+    assert per_tile.max_inflight == 1   # per-tile forces depth-2 pipeline
+
+
+def test_deferred_readback_matches_per_tile(served):
+    """Scores/flags must be independent of when device buffers are read
+    back: one tile at a time vs harvested in bulk at flush()."""
+    engine, fl = served
+    results = {}
+    for readback, inflight in (("per_tile", 32), ("deferred", 4),
+                               ("deferred", 1)):
+        server = FleetServer(engine, fl, tile_width=8, rule="q90",
+                             readback=readback, max_inflight=inflight)
+        rids = []
+        for rid, (t, n) in enumerate([(0, 9), (1, 4), (2, 17), (3, 1),
+                                      (0, 23), (2, 8)]):
+            rids.append(server.submit(t, make_request(t, n, seed=5).x,
+                                      request_id=100 + rid))
+        server.flush()
+        results[(readback, inflight)] = [server.take(r) for r in rids]
+    ref = results[("per_tile", 32)]
+    for key, got in results.items():
+        for r_ref, r_got in zip(ref, got):
+            np.testing.assert_array_equal(r_ref.scores, r_got.scores)
+            np.testing.assert_array_equal(r_ref.flags, r_got.flags)
+            assert np.isfinite(r_got.scores).all()
+
+
+def test_deferred_bounds_inflight_queue(served):
+    """step() must cap the device-resident queue at max_inflight; flush()
+    drains it to empty."""
+    engine, fl = served
+    server = FleetServer(engine, fl, tile_width=4, rule="q90",
+                         readback="deferred", max_inflight=2)
+    for rid in range(8):
+        server.submit(rid % K, make_request(rid % K, 4, seed=9).x,
+                      request_id=rid)
+    while server.step():
+        assert len(server._inflight) <= server.max_inflight
+    server.flush()
+    assert len(server._inflight) == 0
+    for rid in range(8):
+        assert np.isfinite(server.take(rid).scores).all()
